@@ -1,0 +1,65 @@
+"""§Roofline: aggregate the dry-run sweep into the per-(arch x shape x
+mesh) roofline table (compute/memory/collective terms, dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPs ratio).
+
+Reads experiments/dryrun/*.json produced by scripts/run_dryruns.sh and
+emits one CSV row per combination plus a markdown table to
+experiments/roofline.md (consumed by EXPERIMENTS.md)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SWEEP = os.path.join(REPO, "experiments", "dryrun")
+
+
+def load_all():
+    rows = []
+    for f in sorted(glob.glob(os.path.join(SWEEP, "*.json"))):
+        d = json.load(open(f))
+        d["pod"] = "2pod" if len(d["mesh"]) == 3 else "1pod"
+        rows.append(d)
+    return rows
+
+
+def run(emit):
+    rows = load_all()
+    if not rows:
+        emit("roofline_missing", 0.0, "run_scripts/run_dryruns.sh_first")
+        return
+    md = ["| arch | shape | mesh | compute_s | memory_s | collective_s | "
+          "dominant | useful_ratio | what would move the dominant term |",
+          "|---|---|---|---|---|---|---|---|---|"]
+    hints = {
+        ("compute_s",): "reduce recompute (remat policy) / larger mesh",
+        ("memory_s",): "fuse elementwise chains; bf16 master weights; "
+                       "larger per-step batch raises intensity",
+        ("collective_s",): "reshard to cut all-gathers; overlap "
+                           "collectives with compute",
+    }
+    for d in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["pod"])):
+        if d["pod"] != "1pod":
+            continue        # roofline table is single-pod per the brief
+        ratio = d.get("useful_flops_ratio")
+        emit(f"roofline_{d['arch']}_{d['shape']}", 0.0,
+             f"c{d['compute_s']:.4f}_m{d['memory_s']:.4f}_"
+             f"x{d['collective_s']:.4f}_{d['dominant']}"
+             f"_r{ratio:.3f}" if ratio else "n/a")
+        md.append(
+            f"| {d['arch']} | {d['shape']} | "
+            f"{'x'.join(map(str, d['mesh']))} | {d['compute_s']:.4f} | "
+            f"{d['memory_s']:.4f} | {d['collective_s']:.4f} | "
+            f"{d['dominant'].replace('_s', '')} | "
+            f"{(f'{ratio:.3f}' if ratio else 'n/a')} | "
+            f"{hints[(d['dominant'],)]} |")
+    out = os.path.join(REPO, "experiments", "roofline.md")
+    with open(out, "w") as f:
+        f.write("\n".join(md) + "\n")
+    n2 = sum(1 for d in rows if d["pod"] == "2pod")
+    emit("roofline_table_written", 0.0,
+         f"{out}_1pod{len(rows)-n2}_2pod{n2}")
+    # multi-pod proof line: every arch x shape compiled on (2,16,16)
+    emit("multipod_dryrun_coverage", 0.0,
+         f"{'PASS' if n2 >= 44 else 'INCOMPLETE'}_{n2}_combos")

@@ -1,0 +1,55 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV rows (benchmark harness entrypoint — deliverable d).
+#
+#   PYTHONPATH=src python -m benchmarks.run [--only fig3,...] [--fast]
+#
+# Modules (paper artifact -> module):
+#   Fig 3 / Fig 5 space : accumulation_memory
+#   Fig 5 time          : accumulation_time
+#   Figs 4/6/7/8        : weak_scaling
+#   Figs 9/10/11        : strong_scaling
+#   Fig 12              : quality_invariance
+#   §Roofline           : roofline  (aggregates experiments/dryrun)
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module substrings to run")
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the (slow) training-based Fig 12 benchmark")
+    args = ap.parse_args()
+
+    from benchmarks import (accumulation_memory, accumulation_time,
+                            weak_scaling, strong_scaling, roofline)
+    modules = [("accumulation_memory", accumulation_memory),
+               ("accumulation_time", accumulation_time),
+               ("weak_scaling", weak_scaling),
+               ("strong_scaling", strong_scaling),
+               ("roofline", roofline)]
+    if not args.fast:
+        from benchmarks import quality_invariance
+        modules.insert(4, ("quality_invariance", quality_invariance))
+    if args.only:
+        keys = args.only.split(",")
+        modules = [(n, m) for n, m in modules
+                   if any(k in n for k in keys)]
+
+    print("name,us_per_call,derived")
+
+    def emit(name: str, us: float, derived: str) -> None:
+        print(f"{name},{us:.1f},{derived}")
+        sys.stdout.flush()
+
+    for name, mod in modules:
+        t0 = time.perf_counter()
+        mod.run(emit)
+        emit(f"_module_{name}_wall_s", (time.perf_counter() - t0) * 1e6,
+             "total")
+
+
+if __name__ == '__main__':
+    main()

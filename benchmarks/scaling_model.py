@@ -1,0 +1,96 @@
+"""Calibrated performance model for the paper's cluster experiments.
+
+We cannot run 300 Xeon nodes; we CAN model the two accumulation
+strategies' communication exactly (wire bytes come from
+``repro.core.comm`` — the same accounting the runtime uses) and calibrate
+the two free machine constants against two anchor points from the paper,
+then compare the model's PREDICTIONS at all other scales against the
+paper's reported curves.
+
+Machine model (per training step, per worker):
+  T(P) = T_compute + T_wire(P) + T_apply(P) + alpha * n_coll * log2(P)
+
+  dense (sparse_as_dense=True):
+    T_wire  = ring allreduce: 2 (P-1)/P * G_bytes / BW
+    T_apply = const (densify is local, P-independent)
+  sparse (TF Algorithm 1 gather):
+    T_wire  = allgather: (P-1) * S_bytes / BW       (S = per-worker slices)
+    T_apply = beta * P * S_bytes                    (apply grows with rows)
+
+Calibration anchors (paper §5.1): dense 95% at 32 procs; sparse 75% at
+32 procs.  alpha is set from the dense 1200-proc point (91.5%).
+Everything else is prediction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.comm import allreduce_wire_bytes, allgather_wire_bytes
+from repro.launch.dryrun import param_counts
+
+BW = 12.5e9            # Omni-Path 100 Gb/s
+TOKENS_PER_WORKER = 5000
+N_COLL_FUSED = 7       # ~870MB of grads / 128MB fusion buffers
+
+
+@dataclasses.dataclass(frozen=True)
+class PaperModel:
+    g_bytes: float          # total dense gradient bytes
+    s_bytes: float          # per-worker slice bytes (Alg.1 gather input)
+    t_compute: float
+    alpha: float            # per-collective latency (s)
+    beta: float             # sparse apply cost (s per byte * P)
+
+    def t_dense(self, p: int) -> float:
+        if p <= 1:
+            return self.t_compute
+        wire = 2 * (p - 1) / p * self.g_bytes / BW
+        lat = self.alpha * N_COLL_FUSED * math.log2(p)
+        return self.t_compute + wire + lat
+
+    def t_sparse(self, p: int) -> float:
+        if p <= 1:
+            return self.t_compute
+        wire = (p - 1) * self.s_bytes / BW
+        apply = self.beta * p * self.s_bytes
+        lat = self.alpha * N_COLL_FUSED * math.log2(p)
+        return self.t_compute + wire + apply + lat
+
+    def weak_efficiency(self, p: int, sparse: bool) -> float:
+        t = self.t_sparse(p) if sparse else self.t_dense(p)
+        return self.t_compute / t
+
+    # -- strong scaling: global batch fixed, batch/worker = B/P ----------
+    def t_strong(self, p: int, global_tokens: int) -> float:
+        frac = (global_tokens / p) / TOKENS_PER_WORKER
+        wire = 2 * (p - 1) / p * self.g_bytes / BW if p > 1 else 0.0
+        lat = self.alpha * N_COLL_FUSED * math.log2(p) if p > 1 else 0.0
+        return self.t_compute * frac + wire + lat
+
+
+def calibrate() -> PaperModel:
+    cfg = get_config("transformer-big")
+    n_params, _ = param_counts(cfg)
+    g_bytes = n_params * 4.0
+    # Alg.1 slices/worker: enc + dec tokens + downgraded dense head
+    rows = 2 * TOKENS_PER_WORKER + cfg.vocab
+    s_bytes = rows * (cfg.d_model * 4 + 4)
+
+    # anchor 1 (dense 95% @ P=32), alpha initially 0:
+    #   0.95 = T_c / (T_c + wire32)  =>  T_c = wire32 * 0.95/0.05
+    wire32 = 2 * 31 / 32 * g_bytes / BW
+    t_compute = wire32 * 0.95 / 0.05
+    # anchor 2 (dense 91.5% @ P=1200) fixes alpha:
+    wire1200 = 2 * 1199 / 1200 * g_bytes / BW
+    slack = t_compute / 0.915 - t_compute - wire1200
+    alpha = max(slack / (N_COLL_FUSED * math.log2(1200)), 0.0)
+    # anchor 3 (sparse 75% @ P=32) fixes beta:
+    m0 = PaperModel(g_bytes, s_bytes, t_compute, alpha, 0.0)
+    t_target = t_compute / 0.75
+    gap = t_target - m0.t_sparse(32)
+    beta = max(gap / (32 * s_bytes), 0.0)
+    return PaperModel(g_bytes, s_bytes, t_compute, alpha, beta)

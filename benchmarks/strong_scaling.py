@@ -1,0 +1,45 @@
+"""Paper Figs. 9, 10, 11: strong scaling at global batch 819,200 tokens.
+
+2 processes per node (paper §5.2).  Throughput and time-to-solution from
+the calibrated model; paper checkpoints: >8x speedup from 16 -> 200
+nodes, ~121x single-node -> 200-node time-to-solution, degradation
+beyond 256 nodes as per-worker batch shrinks toward 1k tokens.
+"""
+from __future__ import annotations
+
+from benchmarks.scaling_model import calibrate, TOKENS_PER_WORKER
+
+GLOBAL_BATCH = 819_200
+PPN = 2
+NODES = (1, 16, 32, 64, 100, 150, 200, 256, 400, 512)
+TOTAL_STEPS = 13_000      # to the 27.5-BLEU checkpoint (paper scale)
+
+
+def run(emit):
+    m = calibrate()
+    t16 = m.t_strong(16 * PPN, GLOBAL_BATCH)
+    thru16 = GLOBAL_BATCH / t16
+    for nodes in NODES:
+        p = nodes * PPN
+        t = m.t_strong(p, GLOBAL_BATCH)
+        thru = GLOBAL_BATCH / t
+        per_worker = GLOBAL_BATCH // p
+        emit(f"fig9_strong_throughput_N{nodes}", t * 1e6,
+             f"{thru/1e3:.0f}ktok/s_bw{per_worker}tok")
+        if nodes >= 16:
+            emit(f"fig10_strong_speedup_N{nodes}", 0.0,
+                 f"{thru/thru16:.2f}x_vs_16nodes_ideal{nodes/16:.1f}x")
+    # Fig 11: time to solution.  Single node uses batch 25,600 (largest
+    # that fits) and 16x the iterations (paper §5.2).
+    t1 = m.t_strong(PPN, 25_600 * PPN)          # per-step, 1 node
+    tts1 = t1 * TOTAL_STEPS * 16 / 3600.0
+    t200 = m.t_strong(200 * PPN, GLOBAL_BATCH)
+    tts200 = t200 * TOTAL_STEPS / 3600.0
+    emit("fig11_tts_1node", 0.0, f"{tts1/24:.1f}days_paper~30days")
+    emit("fig11_tts_200nodes", 0.0, f"{tts200:.1f}h_paper~6h")
+    emit("fig11_tts_ratio", 0.0,
+         f"{tts1/tts200:.0f}x_paper_121x")
+    # 16->200 node speedup consistency (paper: >8x of max 12.5)
+    s = (GLOBAL_BATCH / m.t_strong(400, GLOBAL_BATCH)) / thru16
+    emit("fig10_paper_consistency", 0.0,
+         f"{'PASS' if 8.0 <= s <= 12.5 else 'FAIL'}_speedup{s:.1f}x")

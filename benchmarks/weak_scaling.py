@@ -1,0 +1,39 @@
+"""Paper Figs. 4, 6, 7, 8: weak scaling, sparse vs dense accumulation.
+
+Calibrated model (see scaling_model.py): two anchors fitted, all other
+points are PREDICTIONS compared against the paper's reported values.
+"""
+from __future__ import annotations
+
+from benchmarks.scaling_model import calibrate
+
+# paper-reported weak-scaling efficiencies (Figs. 6 and 8)
+PAPER_DENSE = {32: 0.95, 1200: 0.915}
+PAPER_SPARSE = {16: 0.84, 32: 0.75}
+PREDICT_POINTS = (4, 8, 16, 32, 64, 128, 256, 512, 1200)
+
+
+def run(emit):
+    m = calibrate()
+    emit("weakscale_calibration", 0.0,
+         f"Tc{m.t_compute:.2f}s_alpha{m.alpha*1e3:.2f}ms_"
+         f"beta{m.beta*1e9:.3f}ns_per_B")
+    for p in PREDICT_POINTS:
+        ed = m.weak_efficiency(p, sparse=False)
+        es = m.weak_efficiency(p, sparse=True)
+        tag = ""
+        if p in PAPER_DENSE:
+            tag += f"_paper_dense{PAPER_DENSE[p]:.3f}"
+        if p in PAPER_SPARSE:
+            tag += f"_paper_sparse{PAPER_SPARSE[p]:.2f}"
+        emit(f"fig6_8_weak_eff_P{p}", 0.0,
+             f"dense{ed:.3f}_sparse{es:.3f}{tag}")
+    # scaled speedup (Fig. 4 / Fig. 7): speedup = P * efficiency
+    for p in (32, 300 * 4):
+        emit(f"fig7_weak_speedup_P{p}", 0.0,
+             f"dense{p * m.weak_efficiency(p, False):.0f}_of_{p}")
+    # headline check: sparse strategy crosses below 75% by P=32 while
+    # dense stays above 90% out to P=1200
+    ok = (m.weak_efficiency(32, True) <= 0.80
+          and m.weak_efficiency(1200, False) >= 0.90)
+    emit("fig6_8_paper_consistency", 0.0, f"{'PASS' if ok else 'FAIL'}")

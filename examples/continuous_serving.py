@@ -1,0 +1,53 @@
+"""Continuous-batching serving demo: a stream of variable-length
+requests served through fixed decode slots with per-slot cache recycling.
+
+    PYTHONPATH=src python examples/continuous_serving.py \\
+        [--arch zamba2-7b] [--slots 4] [--requests 12]
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serving import ContinuousBatcher, Request
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--cache-len", type=int, default=48)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+
+    batcher = ContinuousBatcher(model, params, n_slots=args.slots,
+                                cache_len=args.cache_len)
+    for i in range(args.requests):
+        plen = int(rng.integers(3, 10))
+        batcher.submit(Request(
+            uid=i,
+            prompt=rng.integers(4, cfg.vocab, (plen,)).astype(np.int32),
+            max_new=int(rng.integers(4, 12))))
+
+    t0 = time.perf_counter()
+    done = batcher.run()
+    dt = time.perf_counter() - t0
+    st = batcher.stats
+    print(f"{cfg.name}: {len(done)} requests through {args.slots} slots")
+    print(f"  {st.steps} batch steps, slot utilisation "
+          f"{st.utilisation:.0%}, {dt:.2f}s wall (incl. compile)")
+    for req in sorted(done, key=lambda r: r.uid)[:5]:
+        print(f"  req{req.uid}: prompt[{len(req.prompt)}] -> "
+              f"{req.output}")
+
+
+if __name__ == "__main__":
+    main()

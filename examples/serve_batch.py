@@ -1,0 +1,54 @@
+"""Batched serving example: prefill a batch of prompts, decode with a KV
+cache (full and sliding-window ring-buffer variants), across several
+architecture families.
+
+    PYTHONPATH=src python examples/serve_batch.py [--arch llama3.2-1b]
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serving import ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b",
+                    help="any assigned arch id (reduced variant is used)")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--window", type=int, default=None,
+                    help="sliding-window size (ring-buffer cache)")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(4, cfg.vocab,
+                           (args.batch, args.prompt_len)).astype(np.int32)
+
+    cache_len = (args.window if args.window
+                 else args.prompt_len + args.max_new + 1)
+    eng = ServeEngine(model, params, cache_len=cache_len,
+                      window=args.window, ring=args.window is not None)
+    t0 = time.perf_counter()
+    out = eng.generate(prompts, max_new=args.max_new)
+    dt = time.perf_counter() - t0
+    n_tok = out.size
+    print(f"{cfg.name}: batch={args.batch} prompt={args.prompt_len} "
+          f"-> {out.shape[1]} new tokens each")
+    print(f"cache: {'ring(window=%d)' % args.window if args.window else 'full'}"
+          f", {n_tok} tokens in {dt:.2f}s ({n_tok/dt:.0f} tok/s incl. "
+          f"prefill+compile)")
+    for i, row in enumerate(out):
+        print(f"  seq{i}: {row.tolist()}")
+
+
+if __name__ == "__main__":
+    main()

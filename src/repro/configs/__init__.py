@@ -1,0 +1,4 @@
+from repro.configs.base import (ArchConfig, MoEConfig, MLAConfig, SSMConfig,
+                                XLSTMConfig, FrontendConfig, InputShape,
+                                INPUT_SHAPES, ARCH_IDS, get_config,
+                                all_configs)

@@ -1,0 +1,24 @@
+"""SeamlessM4T-large-v2 text decoder backbone [arXiv:2308.11596].
+
+Enc-dec, multimodal: the conformer speech encoder is a STUB (precomputed
+frame embeddings via input_specs); this config is the 24-layer text
+decoder with cross-attention to those frames. Tied decoder emb/proj —
+the paper's exact mixed sparse+dense gradient pathology.
+"""
+from repro.configs.base import ArchConfig, FrontendConfig
+
+CONFIG = ArchConfig(
+    name="seamless-m4t-large-v2",
+    family="audio",
+    n_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=8192,
+    vocab=256206,
+    tied_embeddings=True,
+    sliding_window=8192,
+    frontend=FrontendConfig(kind="audio", n_embeds=1024,
+                            cross_attention=True),
+    source="arXiv:2308.11596",
+)

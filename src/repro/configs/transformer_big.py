@@ -1,0 +1,26 @@
+"""The paper's own model: TensorFlow official Transformer "big"
+(Vaswani et al. 2017) — enc-dec, d_model=1024, 16 heads, d_ff=4096,
+shared source/target/softmax embedding (vocab 33708, WMT17 en-de BPE).
+
+Modelled here as the decoder backbone with cross-attention to encoder
+states (the encoder states enter via the same frontend mechanism as the
+audio stub so the paper's accumulation pathology — tied embedding used by
+lookup AND projection — is reproduced exactly).
+"""
+from repro.configs.base import ArchConfig, FrontendConfig
+
+CONFIG = ArchConfig(
+    name="transformer-big",
+    family="audio",          # enc-dec plumbing (frontend = encoder states)
+    n_layers=6,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=4096,
+    vocab=33708,
+    tied_embeddings=True,
+    sliding_window=8192,
+    frontend=FrontendConfig(kind="audio", n_embeds=256,
+                            cross_attention=True),
+    source="arXiv:1706.03762 / tensorflow/models official transformer",
+)

@@ -1,0 +1,12 @@
+"""Core: the paper's contribution — densifying assumed-sparse tensors.
+
+Public API:
+  IndexedSlices           sparse row-slice gradient (tf.IndexedSlices analogue)
+  accumulate_gradients    paper Alg. 1 (TF) / Alg. 2 (proposed) accumulation
+  DistributedOptimizer    Horovod-style wrapper with sparse_as_dense switch
+"""
+from repro.core.indexed_slices import IndexedSlices, concat_slices, is_indexed_slices
+from repro.core.accumulation import (accumulate_gradients, densify,
+                                     dense_to_slices, accumulated_nbytes)
+from repro.core.dist_opt import DistributedOptimizer, ExchangeStats
+from repro.core import comm, fusion

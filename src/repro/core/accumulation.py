@@ -1,0 +1,135 @@
+"""Tensor accumulation strategies — the heart of the paper.
+
+Implements, faithfully:
+
+  * ``tf_algorithm1`` — TensorFlow's ``_AggregatedGrads`` rule (paper
+    Algorithm 1): if ANY contribution is an IndexedSlices, downgrade ALL
+    contributions to IndexedSlices and accumulate by concatenation
+    (gather).  This is the edge case that produces the huge buffers.
+
+  * ``proposed_algorithm2`` — the paper's proposed TensorFlow fix
+    (Algorithm 2): if ANY contribution is dense, densify all and
+    accumulate by reduction; only all-sparse inputs stay sparse.
+
+  * ``sparse_as_dense`` pre-pass — the paper's shipped Horovod fix
+    (Listing 1): forcibly convert every IndexedSlices to dense BEFORE
+    the accumulation rule runs, so Algorithm 1 always takes its dense
+    (reduce) branch.
+
+A "contribution" list holds the cotangents that autodiff produced for one
+variable from its multiple uses — e.g. a tied embedding/projection weight
+has one sparse (lookup) and one dense (projection matmul) contribution.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.indexed_slices import IndexedSlices, concat_slices
+
+Contribution = Union[jax.Array, IndexedSlices]
+
+
+def _all_dense(grads: Sequence[Contribution]) -> bool:
+    return all(not isinstance(g, IndexedSlices) for g in grads)
+
+
+def _any_dense(grads: Sequence[Contribution]) -> bool:
+    return any(not isinstance(g, IndexedSlices) for g in grads)
+
+
+def dense_to_slices(g: jax.Array) -> IndexedSlices:
+    """TF's downgrade of a dense tensor to IndexedSlices: every row,
+    with indices = arange.  (This is what makes Algorithm 1 pathological:
+    the 'sparse' representation of the dense projection gradient is
+    LARGER than the dense tensor itself.)"""
+    n = g.shape[0]
+    return IndexedSlices(indices=jnp.arange(n, dtype=jnp.int32),
+                         values=g, dense_shape=tuple(g.shape))
+
+
+def densify(g: Contribution, use_kernel: bool = False) -> jax.Array:
+    """Convert a contribution to dense.  ``use_kernel`` selects the Pallas
+    TPU scatter-add kernel (interpret-mode on CPU); default is the XLA
+    scatter-add path."""
+    if not isinstance(g, IndexedSlices):
+        return g
+    if use_kernel:
+        from repro.kernels import ops as kernel_ops
+        return kernel_ops.densify(g.indices, g.values, g.dense_shape)
+    return g.to_dense()
+
+
+def accumulate_gradients(
+    grads: Sequence[Contribution],
+    algorithm: str = "tf_algorithm1",
+    sparse_as_dense: bool = False,
+    use_kernel: bool = False,
+) -> Contribution:
+    """Accumulate the contributions for ONE variable.
+
+    Args:
+      grads: cotangent contributions (dense arrays and/or IndexedSlices).
+      algorithm: ``tf_algorithm1`` (paper Alg. 1, TF upstream behaviour)
+        or ``proposed_algorithm2`` (paper Alg. 2).
+      sparse_as_dense: apply the Horovod Listing-1 pre-pass first.
+      use_kernel: densify via the Pallas kernel.
+
+    Returns:
+      A single dense array (reduce path) or IndexedSlices (gather path).
+    """
+    grads = list(grads)
+    if sparse_as_dense:
+        # Horovod Listing 1: convert IndexedSlices -> Tensor up front.
+        grads = [densify(g, use_kernel=use_kernel) for g in grads]
+
+    if algorithm == "tf_algorithm1":
+        return _tf_algorithm1(grads, use_kernel)
+    elif algorithm == "proposed_algorithm2":
+        return _proposed_algorithm2(grads, use_kernel)
+    raise ValueError(f"unknown accumulation algorithm: {algorithm}")
+
+
+def _tf_algorithm1(grads: List[Contribution], use_kernel: bool) -> Contribution:
+    """Paper Algorithm 1 (TensorFlow _AggregatedGrads)."""
+    if len(grads) < 2:
+        return grads[0]                                   # pass-through
+    if _all_dense(grads):
+        out = grads[0]                                    # dense reduce
+        for g in grads[1:]:
+            out = out + g
+        return out
+    # ANY sparse => downgrade everything to IndexedSlices, gather (concat).
+    slices = [g if isinstance(g, IndexedSlices) else dense_to_slices(g)
+              for g in grads]
+    return concat_slices(tuple(slices))
+
+
+def _proposed_algorithm2(grads: List[Contribution],
+                         use_kernel: bool) -> Contribution:
+    """Paper Algorithm 2 (proposed TF fix)."""
+    if len(grads) < 2:
+        return grads[0]                                   # pass-through
+    if _all_dense(grads):
+        out = grads[0]                                    # dense reduce
+        for g in grads[1:]:
+            out = out + g
+        return out
+    if _any_dense(grads):
+        # NEW branch (Alg. 2 lines 5-7): convert ALL to dense, reduce.
+        dense = [densify(g, use_kernel=use_kernel) for g in grads]
+        out = dense[0]
+        for g in dense[1:]:
+            out = out + g
+        return out
+    # all sparse: stays sparse (gather)
+    return concat_slices(tuple(grads))
+
+
+def accumulated_nbytes(g: Contribution) -> int:
+    """Size in bytes of the accumulated representation (paper Fig. 5)."""
+    if isinstance(g, IndexedSlices):
+        return g.nbytes
+    return int(g.size * g.dtype.itemsize)

@@ -1,0 +1,148 @@
+"""Cross-worker gradient exchange collectives.
+
+Maps the paper's Horovod/MPI collectives onto JAX mesh collectives:
+
+  * Horovod allgather of IndexedSlices  -> ``all_gather_slices``  (the
+    pathological path: message bytes grow linearly in worker count)
+  * Horovod allreduce of dense tensors  -> ``all_reduce_dense``   (the
+    paper's fix: message bytes constant in worker count)
+  * beyond-paper: ``reduce_scatter_dense`` (ZeRO-style sharded reduction)
+
+All functions take ``axis_name`` (or a tuple of axis names, e.g.
+``("pod", "data")``) and must be called under ``shard_map``/``pjit`` with
+those mesh axes bound.  With ``axis_name=None`` they degrade to local
+no-ops so single-device tests and examples reuse the same code path.
+
+``*_bytes`` helpers give the exact wire size of each collective for the
+benchmark harness and the roofline collective term (these are static
+functions of shapes, usable without devices).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.indexed_slices import IndexedSlices
+
+AxisNames = Union[None, str, Sequence[str]]
+
+
+def _axes(axis_name: AxisNames) -> Tuple[str, ...]:
+    if axis_name is None:
+        return ()
+    if isinstance(axis_name, str):
+        return (axis_name,)
+    return tuple(axis_name)
+
+
+def axis_size(axis_name: AxisNames) -> int:
+    axes = _axes(axis_name)
+    n = 1
+    for a in axes:
+        n *= jax.lax.axis_size(a)
+    return n
+
+
+# ---------------------------------------------------------------------------
+# Dense exchange (the paper's fix: accumulate by REDUCTION)
+# ---------------------------------------------------------------------------
+
+def all_reduce_dense(x: jax.Array, axis_name: AxisNames,
+                     average: bool = True) -> jax.Array:
+    """Dense allreduce across the data-parallel axes (Horovod allreduce)."""
+    axes = _axes(axis_name)
+    if not axes:
+        return x
+    out = jax.lax.psum(x, axes)
+    if average:
+        out = out / axis_size(axes)
+    return out
+
+
+def reduce_scatter_dense(x: jax.Array, axis_name: str,
+                         average: bool = True) -> jax.Array:
+    """Beyond-paper: reduce-scatter along ``axis_name`` over dim 0.
+
+    Each worker receives only its ``1/P`` shard of the reduced gradient
+    (ZeRO-style); with sharded optimizer state the full dense gradient is
+    never materialised per worker.
+    """
+    out = jax.lax.psum_scatter(x, axis_name, scatter_dimension=0, tiled=True)
+    if average:
+        out = out / jax.lax.axis_size(axis_name)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Sparse exchange (the pathological path: accumulate by GATHER)
+# ---------------------------------------------------------------------------
+
+def all_gather_slices(s: IndexedSlices, axis_name: AxisNames) -> IndexedSlices:
+    """Allgather of IndexedSlices (Horovod's sparse path).
+
+    The output row count is ``P * n``: the linear-in-worker-count growth
+    that produces the paper's 11.4 GB buffers at 64 workers.
+    """
+    axes = _axes(axis_name)
+    if not axes:
+        return s
+    indices, values = s.indices, s.values
+    for a in reversed(axes):
+        indices = jax.lax.all_gather(indices, a, axis=0, tiled=True)
+        values = jax.lax.all_gather(values, a, axis=0, tiled=True)
+    return IndexedSlices(indices=indices, values=values,
+                         dense_shape=s.dense_shape)
+
+
+# ---------------------------------------------------------------------------
+# Wire-size accounting (static; used by benchmarks + roofline)
+# ---------------------------------------------------------------------------
+
+def dtype_bytes(dtype) -> int:
+    return jnp.dtype(dtype).itemsize
+
+
+def allreduce_wire_bytes(shape: Sequence[int], dtype, n_workers: int,
+                         algorithm: str = "ring") -> int:
+    """Bytes moved per worker by an allreduce of a ``shape`` tensor.
+
+    ring:   2 * (P-1)/P * size   (send+recv counted once, classic ring)
+    """
+    size = math.prod(shape) * dtype_bytes(dtype)
+    if n_workers <= 1:
+        return 0
+    if algorithm == "ring":
+        return int(2 * (n_workers - 1) / n_workers * size)
+    raise ValueError(algorithm)
+
+
+def allgather_wire_bytes(rows: int, row_elems: int, dtype, n_workers: int,
+                         index_dtype=jnp.int32) -> int:
+    """Bytes moved per worker by an allgather of IndexedSlices.
+
+    Each worker contributes ``rows`` rows; every worker must receive the
+    other ``P-1`` workers' rows (values + indices).
+    """
+    if n_workers <= 1:
+        return 0
+    per_worker = rows * (row_elems * dtype_bytes(dtype)
+                         + dtype_bytes(index_dtype))
+    return int((n_workers - 1) * per_worker)
+
+
+def gathered_buffer_bytes(rows: int, row_elems: int, dtype, n_workers: int,
+                          index_dtype=jnp.int32) -> int:
+    """Size of the ACCUMULATED IndexedSlices buffer each worker ends up
+    holding after the gather — the paper's Fig. 3a / Fig. 5 quantity."""
+    per_worker = rows * (row_elems * dtype_bytes(dtype)
+                         + dtype_bytes(index_dtype))
+    return int(n_workers * per_worker)
+
+
+def dense_buffer_bytes(shape: Sequence[int], dtype) -> int:
+    """Size of the dense accumulated tensor (constant in worker count) —
+    the paper's Fig. 3b / Fig. 5 quantity."""
+    return int(math.prod(shape) * dtype_bytes(dtype))

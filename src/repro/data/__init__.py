@@ -1,0 +1,3 @@
+from repro.data.pipeline import (SyntheticLM, SyntheticTranslation,
+                                 DataPipeline, make_pipeline)
+from repro.data.tokenizer import ToyTokenizer

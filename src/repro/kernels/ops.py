@@ -1,0 +1,212 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handle padding to block multiples, GQA head expansion and layout
+(B, S, H, D) <-> (B*H, S, D); dispatch between the Pallas kernel
+(``impl="pallas"``, interpret-mode on CPU, native on TPU) and the pure-JAX
+oracle-equivalent paths used by the 512-device dry-run
+(``impl="xla"`` / ``impl="xla_chunked"``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.densify import densify_pallas, DEFAULT_BLOCK_N, \
+    DEFAULT_BLOCK_V, DEFAULT_BLOCK_D
+from repro.kernels.flash_attention import flash_attention_pallas, \
+    DEFAULT_BLOCK_Q, DEFAULT_BLOCK_K
+from repro.kernels.ssd import ssd_pallas
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+# ---------------------------------------------------------------------------
+# densify
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("dense_shape", "impl"))
+def densify(indices: jax.Array, values: jax.Array,
+            dense_shape: Tuple[int, ...], impl: str = "pallas") -> jax.Array:
+    """Scatter-add ``values`` rows at ``indices`` into zeros(dense_shape).
+
+    Negative / out-of-range indices are dropped (padding convention).
+    """
+    if impl == "xla":
+        return ref.densify_ref(indices, values, dense_shape)
+    vocab, d = dense_shape
+    n = indices.shape[0]
+    block_n = min(DEFAULT_BLOCK_N, _round_up(n, 8))
+    block_v = min(DEFAULT_BLOCK_V, _round_up(vocab, 8))
+    block_d = min(DEFAULT_BLOCK_D, _round_up(d, 128))
+    np_, vp, dp = (_round_up(n, block_n), _round_up(vocab, block_v),
+                   _round_up(d, block_d))
+    idx = jnp.full((np_,), -1, jnp.int32).at[:n].set(indices.astype(jnp.int32))
+    # out-of-range ids (padding) must not land in the padded vocab rows
+    idx = jnp.where((idx >= 0) & (idx < vocab), idx, -1)
+    vals = jnp.zeros((np_, dp), values.dtype).at[:n, :d].set(values)
+    out = densify_pallas(idx, vals, (vp, dp), block_v=block_v,
+                         block_d=block_d, block_n=block_n)
+    return out[:vocab, :d]
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+def _expand_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    """GQA: repeat kv heads to match query heads. (B, S, Hkv, D) -> (B, S, H, D)."""
+    b, s, hkv, d = k.shape
+    if hkv == n_heads:
+        return k
+    rep = n_heads // hkv
+    return jnp.repeat(k, rep, axis=2)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "window", "impl", "block_q",
+                                    "block_k"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, window: Optional[int] = None,
+                    impl: str = "pallas",
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K) -> jax.Array:
+    """Multi-head attention, shapes q (B,Sq,H,D), k/v (B,Sk,Hkv,D) (GQA ok).
+
+    impl:
+      pallas       Pallas kernel (interpret on CPU, native on TPU)
+      xla          full-softmax reference (small shapes only)
+      xla_chunked  pure-JAX online-softmax scan over kv blocks — the
+                   memory-safe path the 512-device dry-run lowers
+    """
+    h = q.shape[2]
+    k = _expand_kv(k, h)
+    v = _expand_kv(v, h)
+    if impl == "pallas" and v.shape[-1] != q.shape[-1]:
+        impl = "xla_chunked"   # mixed head dims (MLA): kernel variant TBD
+    if impl == "xla":
+        return ref.attention_ref(q, k, v, causal=causal, window=window)
+    if impl == "xla_chunked":
+        # DEFAULT_BLOCK_K (128) is the MXU tile for the Pallas kernel; the
+        # XLA scan wants much larger kv chunks — each scan step spills the
+        # (B,H,S,D) accumulator to HBM, so traffic ~ S/block_k spills
+        # (measured 1.7x prefill memory-term win at 4096 —
+        # EXPERIMENTS.md §Perf H5).  Explicit block_k is honoured.
+        bk = 4096 if block_k == DEFAULT_BLOCK_K else block_k
+        return _chunked_attention(q, k, v, causal=causal, window=window,
+                                  block_k=bk)
+    b, sq, _, d = q.shape
+    sk = k.shape[1]
+    bq = min(block_q, _round_up(sq, 8))
+    bk = min(block_k, _round_up(sk, 8))
+    sqp, skp = _round_up(sq, bq), _round_up(sk, bk)
+    scale = d ** -0.5
+
+    def pad(x, s_to):
+        return jnp.pad(x, ((0, 0), (0, s_to - x.shape[1]), (0, 0), (0, 0)))
+
+    qp = pad(q, sqp).transpose(0, 2, 1, 3).reshape(b * h, sqp, d)
+    kp = pad(k, skp).transpose(0, 2, 1, 3).reshape(b * h, skp, d)
+    vp = pad(v, skp).transpose(0, 2, 1, 3).reshape(b * h, skp, d)
+    # explicit alignment: query i sits at REAL position i + (sk - sq);
+    # kv_len masks the padded trailing keys (essential when causal=False)
+    out = flash_attention_pallas(qp, kp, vp, causal=causal, window=window,
+                                 scale=scale, block_q=bq, block_k=bk,
+                                 q_offset=sk - sq, kv_len=sk)
+    out = out.reshape(b, h, sqp, d).transpose(0, 2, 1, 3)
+    return out[:, :sq]
+
+
+def _chunked_attention(q, k, v, causal: bool, window: Optional[int],
+                       block_k: int = 4096) -> jax.Array:
+    """Online-softmax scan over kv chunks in pure JAX (lax.scan).
+
+    Mathematically identical to the Pallas kernel; O(Sq * block_k) live
+    memory.  This is what the production dry-run lowers (Pallas-TPU cannot
+    compile on the CPU-only container).
+    """
+    b, sq, h, d = q.shape
+    dv = v.shape[-1]                      # may differ from d (MLA)
+    sk = k.shape[1]
+    nchunks = -(-sk // block_k)
+    skp = nchunks * block_k
+    kp = jnp.pad(k, ((0, 0), (0, skp - sk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, skp - sk), (0, 0), (0, 0)))
+    kc = kp.reshape(b, nchunks, block_k, h, d).transpose(1, 0, 2, 3, 4)
+    vc = vp.reshape(b, nchunks, block_k, h, dv).transpose(1, 0, 2, 3, 4)
+    scale = d ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    q_pos = jnp.arange(sq) + (sk - sq)
+
+    def step(carry, inputs):
+        acc, m, l = carry
+        ci, kb, vb = inputs
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, kb.astype(jnp.float32))
+        k_pos = ci * block_k + jnp.arange(block_k)
+        mask = k_pos[None, :] < sk
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if window is not None:
+            mask &= (q_pos[:, None] - k_pos[None, :]) < window
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(mask[None, None], p, 0.0)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, vb.astype(jnp.float32))
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((b, h, sq, dv), jnp.float32)
+    m0 = jnp.full((b, h, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(
+        step, (acc0, m0, l0), (jnp.arange(nchunks), kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# ssd (Mamba2 chunked scan)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("chunk", "impl"))
+def ssd(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+        c: jax.Array, chunk: int = 64, impl: str = "pallas"):
+    """Chunked SSD scan over heads with shared B/C.
+
+    x (B, S, H, P), dt (B, S, H), a (H,), b/c (B, S, N).
+    Returns (y (B, S, H, P), final_state (B, H, N, P)).
+
+    impl="pallas": VMEM-resident per-chunk tiles (interpret on CPU,
+    native on TPU); impl="xla": sequential-recurrence oracle.
+    """
+    bb, s, h, p = x.shape
+    n = b.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    sp = s + pad
+    xf = x.transpose(0, 2, 1, 3).reshape(bb * h, sp, p)
+    dtf = dt.transpose(0, 2, 1).reshape(bb * h, sp)
+    af = jnp.tile(a, bb)
+    bf = jnp.repeat(b[:, None], h, axis=1).reshape(bb * h, sp, n)
+    cf = jnp.repeat(c[:, None], h, axis=1).reshape(bb * h, sp, n)
+    if impl == "xla":
+        y, state = ref.ssd_ref(xf, dtf, af, bf, cf)
+    else:
+        y, state = ssd_pallas(xf, dtf, af, bf, cf, chunk)
+    y = y.reshape(bb, h, sp, p).transpose(0, 2, 1, 3)[:, :s]
+    return y, state.reshape(bb, h, n, p)

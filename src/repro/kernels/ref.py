@@ -1,0 +1,79 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def densify_ref(indices: jax.Array, values: jax.Array,
+                dense_shape: Tuple[int, ...]) -> jax.Array:
+    """Scatter-add rows into a zero dense tensor (duplicates sum).
+
+    Oracle for ``kernels.densify``.  Rows with index < 0 or >= vocab are
+    dropped (used for padding).
+    """
+    vocab = dense_shape[0]
+    valid = (indices >= 0) & (indices < vocab)
+    safe = jnp.where(valid, indices, 0)
+    vals = jnp.where(valid[:, None], values, 0)
+    zeros = jnp.zeros(dense_shape, dtype=values.dtype)
+    return zeros.at[safe].add(vals)
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                  causal: bool = True,
+                  window: Optional[int] = None,
+                  scale: Optional[float] = None) -> jax.Array:
+    """Reference multi-head attention (full softmax materialisation).
+
+    Shapes: q (B, Sq, H, D), k/v (B, Sk, H, D).  Oracle for
+    ``kernels.flash_attention``.  ``window`` masks keys more than
+    ``window-1`` positions behind the query (sliding window incl. self).
+    Positions are aligned so query i attends keys up to i + (Sk - Sq).
+    """
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    sq, sk = q.shape[1], k.shape[1]
+    q_pos = jnp.arange(sq)[:, None] + (sk - sq)
+    k_pos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= (q_pos - k_pos) < window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    # rows that are fully masked produce NaN; zero them (can't happen for
+    # causal with window>=1 and sk>=sq, but keep the oracle total)
+    p = jnp.nan_to_num(p)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v).astype(q.dtype)
+
+
+def ssd_ref(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+            c: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Sequential-recurrence SSD oracle (exact, O(S) steps).
+
+    x (BH, S, P), dt (BH, S), a (BH,), b/c (BH, S, N).
+    Returns (y (BH, S, P), final_state (BH, N, P)).
+    """
+    bh, s, p = x.shape
+    n = b.shape[-1]
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp            # (BH,P), (BH,), (BH,N), (BH,N)
+        decay = jnp.exp(dtt * a)[:, None, None]
+        state = decay * state + (dtt[:, None] * bt)[..., None] \
+            * xt[:, None, :]
+        y = jnp.einsum("bn,bnp->bp", ct, state)
+        return state, y
+
+    state0 = jnp.zeros((bh, n, p), jnp.float32)
+    xs = (x.transpose(1, 0, 2).astype(jnp.float32),
+          dt.transpose(1, 0).astype(jnp.float32),
+          b.transpose(1, 0, 2).astype(jnp.float32),
+          c.transpose(1, 0, 2).astype(jnp.float32))
+    state, ys = jax.lax.scan(step, state0, xs)
+    return ys.transpose(1, 0, 2), state

@@ -1,0 +1,315 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_XLA_EXTRA", "") +
+                           " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: AOT lower + compile every (arch x shape x mesh).
+
+Proves the distribution config is coherent without hardware: 512
+placeholder host devices form the production mesh; params/batches/caches
+are ShapeDtypeStructs (no allocation); ``jit(...).lower().compile()``
+must succeed, and its memory/cost analysis feeds EXPERIMENTS.md §Dry-run
+and §Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b \
+      --shape train_4k [--multi-pod] [--out out.json] [--print-hlo]
+"""
+import argparse
+import json
+import re
+import sys
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.core import DistributedOptimizer
+from repro.launch import flops as flops_lib
+from repro.launch import hlo as hlo_lib
+from repro.launch import mesh as mesh_lib
+from repro.launch import sharding as shard_lib
+from repro.launch import specs as specs_lib
+from repro.models import build_model
+from repro.models.activation_sharding import activation_sharding
+from repro.optim import adamw, noam_schedule
+from repro.training import make_train_step
+
+def lower_step(arch: str, shape_name: str, multi_pod: bool,
+               mode: str = "gspmd", fsdp: bool = True, pure_dp: bool = False,
+               zero1: bool = False,
+               attn_impl: str = "xla_chunked",
+               mesh_override=None,
+               ssm_chunk: int = None,
+               moe_decode: str = "dropless",
+               loss_chunk: int = 512):
+    """Build + lower the appropriate step.  Returns (lowered, meta, fn_args)."""
+    import dataclasses as _dc
+    cfg = get_config(arch)
+    if ssm_chunk and cfg.ssm is not None:
+        cfg = cfg.with_(ssm=_dc.replace(cfg.ssm, chunk=ssm_chunk))
+    shape = INPUT_SHAPES[shape_name]
+    model = build_model(cfg)
+    mesh = (mesh_override if mesh_override is not None
+            else mesh_lib.make_production_mesh(multi_pod=multi_pod))
+
+    p_structs = specs_lib.params_structs(cfg)
+    # ZeRO-1 by default: weights sharded over `model` only (Megatron
+    # col/row rules); optimizer state additionally over `data`.  Weights
+    # get data-sharding (full FSDP) only when a model-only shard would
+    # not fit HBM (>8 GB/device) — FSDP'd weights cost per-layer
+    # activation-grad gathers in backward (EXPERIMENTS.md §Perf H2.6).
+    import numpy as _np
+    n_model_axis = dict(zip(mesh.axis_names, mesh.devices.shape)).get(
+        "model", 1)
+    param_bytes = sum(
+        _np.prod(l.shape) * l.dtype.itemsize
+        for l in jax.tree_util.tree_leaves(p_structs))
+    weights_fsdp = fsdp and (shape.kind == "train"
+                             or param_bytes / n_model_axis > 8e9)
+    if pure_dp:
+        # paper-faithful Horovod layout: weights REPLICATED on every
+        # worker, batch sharded across all chips, gradients all-reduced.
+        p_shard = shard_lib.replicated(p_structs, mesh)
+    else:
+        p_shard = shard_lib.params_shardings(p_structs, mesh,
+                                             fsdp=weights_fsdp)
+
+    meta: Dict[str, Any] = dict(arch=arch, shape=shape_name,
+                                mesh=list(mesh.devices.shape),
+                                axes=list(mesh.axis_names), mode=mode)
+    dp_axes = (tuple(mesh.axis_names) if pure_dp else
+               tuple(a for a in mesh.axis_names if a != "model"))
+    meta["pure_dp"] = pure_dp
+    import contextlib
+    act_ctx = lambda: activation_sharding(dp_axes)
+
+    if shape.kind == "train":
+        opt = DistributedOptimizer(
+            adamw(noam_schedule(cfg.d_model)), sparse_as_dense=True,
+            algorithm="proposed_algorithm2", axis_name=None)
+        step = make_train_step(model, opt, sparse_embedding=False,
+                               attn_impl=attn_impl, loss_chunk=loss_chunk,
+                               remat=True)
+        o_structs = jax.eval_shape(opt.init, p_structs)
+        o_shard = (shard_lib.replicated(o_structs, mesh)
+                   if (pure_dp and not zero1)
+                   else shard_lib.params_shardings(
+                       jax.tree_util.tree_map(lambda x: x, o_structs),
+                       mesh, fsdp=fsdp))
+        batch = specs_lib.input_specs(cfg, shape)
+        b_shard = shard_lib.batch_shardings(batch, mesh,
+                                            dp_axes=dp_axes)
+        with mesh, act_ctx():
+            jitted = jax.jit(step,
+                             in_shardings=(p_shard, o_shard, b_shard),
+                             out_shardings=(p_shard, o_shard, None))
+            lowered = jitted.lower(p_structs, o_structs, batch)
+        return lowered, meta, (step, (p_structs, o_structs, batch))
+
+    if shape.kind == "prefill":
+        batch = specs_lib.input_specs(cfg, shape)
+        b_shard = shard_lib.batch_shardings(batch, mesh)
+
+        def prefill_step(params, batch):
+            h, _ = model.forward(params, batch, attn_impl=attn_impl)
+            return model.head(params, h[:, -1:])
+
+        with mesh, act_ctx():
+            jitted = jax.jit(prefill_step,
+                             in_shardings=(p_shard, b_shard),
+                             out_shardings=None)
+            lowered = jitted.lower(p_structs, batch)
+        return lowered, meta, (prefill_step, (p_structs, batch))
+
+    # decode
+    toks, cache, window, ring = specs_lib.decode_specs(cfg, shape)
+    enc_spec = toks.pop("enc", None)
+    c_shard = shard_lib.cache_shardings(cache, mesh, shape.global_batch)
+    t_shard = shard_lib.batch_shardings(toks, mesh)
+    meta.update(window=window, ring=ring)
+
+    def serve_step(params, cache, toks, enc=None):
+        return model.decode_step(params, cache, toks["tokens"], enc=enc,
+                                 window=window, attn_impl=attn_impl,
+                                 ring=ring, moe_mode=moe_decode)
+
+    with mesh, act_ctx():
+        if enc_spec is not None:
+            e_shard = shard_lib.batch_shardings(enc_spec, mesh)
+            jitted = jax.jit(serve_step,
+                             in_shardings=(p_shard, c_shard, t_shard,
+                                           e_shard),
+                             out_shardings=(None, c_shard))
+            lowered = jitted.lower(p_structs, cache, toks, enc_spec)
+            fa = (serve_step, (p_structs, cache, toks, enc_spec))
+        else:
+            jitted = jax.jit(serve_step,
+                             in_shardings=(p_shard, c_shard, t_shard),
+                             out_shardings=(None, c_shard))
+            lowered = jitted.lower(p_structs, cache, toks)
+            fa = (serve_step, (p_structs, cache, toks))
+    return lowered, meta, fa
+
+
+def analyse(lowered, meta: Dict[str, Any], n_chips: int,
+            fn_args=None) -> Dict[str, Any]:
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    compile_s = time.perf_counter() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = lowered.as_text()
+    hlo_stats = hlo_lib.analyze_collectives(hlo)
+    hbm_bytes = hlo_stats.pop("__bytes__", 0.0) * 2.0   # read + write
+    coll = hlo_stats
+    coll_total = float(sum(coll.values()))
+
+    # scan-aware GLOBAL flop count from the jaxpr (XLA's cost_analysis
+    # counts while bodies once; see flops.py)
+    jx = {"flops": 0.0, "bytes": 0.0}
+    if fn_args is not None:
+        fn, args = fn_args
+        jx = flops_lib.count_fn_flops(fn, *args)
+    flops_dev = jx["flops"] / n_chips
+
+    compute_s = flops_dev / mesh_lib.PEAK_FLOPS_BF16
+    memory_s = hbm_bytes / mesh_lib.HBM_BW
+    collective_s = coll_total / mesh_lib.ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+
+    out = dict(meta)
+    out.update(
+        compile_s=compile_s,
+        flops_global_jaxpr=jx["flops"],
+        flops_per_device=flops_dev,
+        hbm_bytes_per_device=hbm_bytes,
+        xla_cost_flops_scan_once=float(cost.get("flops", 0.0)),
+        xla_cost_bytes_scan_once=float(cost.get("bytes accessed", 0.0)),
+        collective_bytes_per_device=coll,
+        collective_total_bytes=coll_total,
+        **terms,
+        dominant=dominant,
+        memory=dict(
+            argument_bytes=getattr(mem, "argument_size_in_bytes", None),
+            output_bytes=getattr(mem, "output_size_in_bytes", None),
+            temp_bytes=getattr(mem, "temp_size_in_bytes", None),
+            generated_code_bytes=getattr(mem, "generated_code_size_in_bytes",
+                                         None),
+        ),
+        n_chips=n_chips,
+    )
+    return out
+
+
+def model_flops(arch: str, shape_name: str) -> Dict[str, float]:
+    """6*N*D (dense) / 6*N_active*D (MoE) reference FLOPs."""
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    n_params, n_active = param_counts(cfg)
+    d_tokens = shape.global_batch * (shape.seq_len if shape.kind == "train"
+                                     else 1)
+    if shape.kind == "prefill":
+        d_tokens = shape.global_batch * shape.seq_len
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return {"n_params": n_params, "n_active": n_active,
+            "model_flops": mult * n_active * d_tokens}
+
+
+def param_counts(cfg) -> tuple:
+    """(total params, activated params) from the config arithmetic."""
+    d, v = cfg.d_model, cfg.vocab
+    emb = v * d * (1 if cfg.tied_embeddings else 2)
+    hd = cfg.resolved_head_dim
+    per_layer_attn = d * cfg.n_heads * hd + 2 * d * cfg.n_kv_heads * hd \
+        + cfg.n_heads * hd * d
+    if cfg.mla is not None:
+        m = cfg.mla
+        per_layer_attn = (d * cfg.n_heads * (m.nope_dim + m.rope_dim)
+                          + d * m.kv_lora + d * m.rope_dim
+                          + m.kv_lora * cfg.n_heads * (m.nope_dim + m.v_dim)
+                          + cfg.n_heads * m.v_dim * d)
+    if cfg.family == "ssm":
+        x = cfg.xlstm
+        di = x.mlstm_expand * d
+        per_layer = (d * 2 * di + 3 * di * di + di * d      # mlstm
+                     + 4 * d * d + int(d * x.slstm_ff_mult) * 2 * d)
+        total = emb + cfg.n_layers * per_layer
+        return float(total), float(total)
+    if cfg.family == "hybrid":
+        s = cfg.ssm
+        di = s.expand * d
+        h = di // s.head_dim
+        per_mamba = d * (2 * di + 2 * s.state_dim + h) + di * d
+        shared = per_layer_attn + 3 * d * cfg.d_ff
+        total = emb + cfg.n_layers * per_mamba + shared
+        return float(total), float(total)
+    if cfg.moe is not None:
+        mo = cfg.moe
+        expert = 3 * d * mo.d_ff_expert
+        shared = mo.n_shared * expert
+        per_layer_total = per_layer_attn + mo.n_experts * expert + shared \
+            + d * mo.n_experts
+        per_layer_active = per_layer_attn + mo.top_k * expert + shared \
+            + d * mo.n_experts
+        return (float(emb + cfg.n_layers * per_layer_total),
+                float(emb + cfg.n_layers * per_layer_active))
+    per_layer = per_layer_attn + 3 * d * cfg.d_ff
+    if cfg.frontend is not None and cfg.frontend.cross_attention:
+        per_layer += 4 * d * cfg.n_heads * hd
+    total = emb + cfg.n_layers * per_layer
+    return float(total), float(total)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=list(INPUT_SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--mode", default="gspmd", choices=["gspmd"])
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--zero1", action="store_true",
+                    help="with --pure-dp: shard optimizer state (ZeRO-1)")
+    ap.add_argument("--pure-dp", action="store_true",
+                    help="paper-faithful Horovod layout: replicated "
+                         "weights, batch over all axes, grads allreduced")
+    ap.add_argument("--attn-impl", default="xla_chunked")
+    ap.add_argument("--ssm-chunk", type=int, default=None)
+    ap.add_argument("--moe-decode", default="dropless",
+                    choices=["dropless", "capacity"])
+    ap.add_argument("--loss-chunk", type=int, default=512)
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--print-hlo", action="store_true")
+    args = ap.parse_args(argv)
+
+    n_chips = 512 if args.multi_pod else 256
+    lowered, meta, fn_args = lower_step(
+        args.arch, args.shape, args.multi_pod, mode=args.mode,
+        fsdp=not args.no_fsdp, pure_dp=args.pure_dp, zero1=args.zero1,
+        attn_impl=args.attn_impl,
+        ssm_chunk=args.ssm_chunk, moe_decode=args.moe_decode,
+        loss_chunk=args.loss_chunk)
+    meta.update(fsdp=not args.no_fsdp, ssm_chunk=args.ssm_chunk,
+                moe_decode=args.moe_decode, loss_chunk=args.loss_chunk)
+    if args.print_hlo:
+        print(lowered.as_text()[:20000])
+    result = analyse(lowered, meta, n_chips, fn_args=fn_args)
+    result.update(model_flops(args.arch, args.shape))
+    total_f = result["flops_global_jaxpr"]
+    result["useful_flops_ratio"] = (result["model_flops"] / total_f
+                                    if total_f else None)
+    print(json.dumps(result, indent=2, default=str))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=2, default=str)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,171 @@
+"""Sharding rules: params, optimizer state, batches and caches -> mesh.
+
+Strategy (see DESIGN.md §4): FSDP x TP hybrid.  For every parameter leaf
+(ignoring the leading scan/layer dim) the largest dim divisible by
+|model| is sharded over ``model`` and the largest remaining dim divisible
+by |data| is sharded over ``data`` (ZeRO-style).  MoE expert dims prefer
+``model`` (expert parallelism -> all_to_all dispatch).  Batches shard
+their batch dim over (pod, data); the 500k decode cache shards its
+sequence dim instead (batch=1).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _axis_sizes(mesh: Mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def param_spec(path: Tuple[str, ...], shape: Tuple[int, ...],
+               mesh: Mesh, scanned: bool, fsdp: bool = True) -> P:
+    """PartitionSpec for one parameter leaf."""
+    sizes = _axis_sizes(mesh)
+    n_model = sizes.get("model", 1)
+    n_data = sizes.get("data", 1)
+    spec: list = [None] * len(shape)
+    start = 1 if scanned and len(shape) > 1 else 0
+    dims = list(range(start, len(shape)))
+    # MoE expert weights: EXPERT-parallel over `model` (all_to_all
+    # dispatch), not TP over d_model — keeping each expert's matmul
+    # local to its shard; FSDP over `data` on the LAST (output) dim.
+    # (See EXPERIMENTS.md §Perf, deepseek-v2.)
+    expert_weight = (any(n in ("w_gate", "w_up", "w_down") for n in path)
+                     and len(shape) - start == 3)
+    if expert_weight and n_model > 1 and shape[start] % n_model == 0:
+        spec[start] = "model"
+        last = len(shape) - 1
+        # FSDP only on the hidden (f) dim of the up projections; w_down's
+        # last dim is the residual width whose data-sharding would
+        # collide with the batch axis.
+        if (fsdp and n_data > 1 and shape[last] % n_data == 0
+                and path[-1] != "w_down"):
+            spec[last] = "data"
+        return P(*spec)
+    # Megatron-style pairing.  Column-parallel weights (producing the
+    # wide activation) shard their OUTPUT (last) dim over `model`, plus
+    # `data` on the same dim when divisible (FSDP).  Row-parallel
+    # weights (consuming the wide activation: wo / w_out / w_down /
+    # w_ff2) shard their INPUT (contraction) dim over `model` ONLY, so
+    # the paired matmuls contract locally and emit one small psum of the
+    # residual-width output.  Putting `data` on any contraction dim, or
+    # on a different dim than `model`, collides with the batch sharding
+    # and forces GSPMD to de-shard activations (measured 15 GB/step
+    # gathers — EXPERIMENTS.md §Perf H2).
+    last = len(shape) - 1
+    name = path[-1] if path else ""
+    row_parallel = name in ("wo", "w_out", "w_down", "w_ff2")
+    if row_parallel and len(shape) - start >= 2 \
+            and shape[start] % n_model == 0 and n_model > 1:
+        spec[start] = "model"
+        return P(*spec)
+    if n_model > 1 and shape[last] % n_model == 0 and shape[last] >= n_model:
+        if fsdp and n_data > 1 and shape[last] % (n_model * n_data) == 0:
+            spec[last] = ("model", "data")
+        else:
+            spec[last] = "model"
+        return P(*spec)
+    # fallback: largest divisible dim over model only
+    dims.sort(key=lambda i: -shape[i])
+    for i in dims:
+        if n_model > 1 and shape[i] % n_model == 0 and shape[i] >= n_model:
+            spec[i] = "model"
+            break
+    return P(*spec)
+
+
+def params_shardings(params: Any, mesh: Mesh, fsdp: bool = True) -> Any:
+    """NamedSharding pytree matching ``params`` (works on shape structs)."""
+    def one(path, leaf):
+        shape = tuple(leaf.shape)
+        names = [str(getattr(p, "key", getattr(p, "name", p)))
+                 for p in path]
+        # stacked layer params have the scan dim first
+        scanned = any(n in ("layers", "mamba", "mlstm", "slstm")
+                      for n in names)
+        if len(shape) == 0:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, param_spec(tuple(names), shape, mesh,
+                                              scanned, fsdp))
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def batch_shardings(batch: Any, mesh: Mesh,
+                    shard_seq: bool = False,
+                    dp_axes=None) -> Any:
+    """Batch dim over (pod, data); optionally the seq dim instead when
+    batch == 1 (long-context decode)."""
+    dp = (tuple(dp_axes) if dp_axes is not None else
+          tuple(a for a in mesh.axis_names if a != "model"))
+
+    def one(leaf):
+        shape = tuple(leaf.shape)
+        if len(shape) == 0:
+            return NamedSharding(mesh, P())
+        if shard_seq and len(shape) >= 2 and shape[0] == 1:
+            return NamedSharding(mesh, P(None, dp))
+        total = int(np.prod([_axis_sizes(mesh)[a] for a in dp]))
+        if shape[0] % total == 0:
+            return NamedSharding(mesh, P(dp))
+        return NamedSharding(mesh, P())
+    return jax.tree_util.tree_map(one, batch)
+
+
+def cache_shardings(cache: Any, mesh: Mesh, batch: int) -> Any:
+    """KV/state caches.  Layout (L, B, S, ...): B over (pod,data) when
+    divisible, else S over (pod,data); the (long) SEQUENCE dim over
+    ``model``.
+
+    Sharding the sequence (not the head/feature dim) keeps decode
+    attention's contractions local: scores only need a small psum of the
+    per-shard softmax statistics and the (tokens, lora/head) context,
+    instead of all-reducing the full (B, H, S) score tensor that a
+    feature-dim contraction would force (measured 50x collective blowup
+    on deepseek-v2 decode_32k — EXPERIMENTS.md §Perf)."""
+    sizes = _axis_sizes(mesh)
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+    n_dp = int(np.prod([sizes[a] for a in dp]))
+    n_model = sizes.get("model", 1)
+
+    def one(path, leaf):
+        shape = tuple(leaf.shape)
+        if len(shape) <= 1:
+            return NamedSharding(mesh, P())
+        spec: list = [None] * len(shape)
+        # find batch dim (== batch) after the leading stack dim
+        bdim = None
+        for i, s in enumerate(shape):
+            if s == batch and i > 0:
+                bdim = i
+                break
+        if bdim is None and shape[0] == batch:
+            bdim = 0
+        batch_sharded = False
+        if bdim is not None and batch % n_dp == 0 and batch >= n_dp:
+            spec[bdim] = dp
+            batch_sharded = True
+        # the sequence dim: longest dim that isn't batch/stack
+        sdim = None
+        if len(shape) >= 3:
+            cand = [(s, i) for i, s in enumerate(shape)
+                    if i not in (0, bdim)]
+            if cand:
+                s_len, sdim = max(cand)
+                if s_len < 1024:
+                    sdim = None
+        if sdim is not None:
+            if not batch_sharded and shape[sdim] % (n_dp * n_model) == 0:
+                spec[sdim] = dp + ("model",)
+            elif shape[sdim] % n_model == 0 and n_model > 1:
+                spec[sdim] = "model"
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def replicated(tree: Any, mesh: Mesh) -> Any:
+    return jax.tree_util.tree_map(
+        lambda _: NamedSharding(mesh, P()), tree)

@@ -1,0 +1,68 @@
+"""ShapeDtypeStruct input specs for every (arch x input-shape) combination.
+
+Nothing here allocates device memory: params, batches and caches are all
+``jax.ShapeDtypeStruct`` stand-ins, used by ``dryrun.py`` to AOT-lower
+and compile the production configuration.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.models import build_model
+
+
+def shape_structs(tree: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(jnp.shape(x), x.dtype), tree)
+
+
+def params_structs(cfg: ArchConfig) -> Any:
+    """Param ShapeDtypeStructs WITHOUT allocating: eval_shape over init."""
+    model = build_model(cfg)
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(model.init,
+                          jax.eval_shape(lambda: jax.random.PRNGKey(0)))
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape
+                ) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Batch specs for a train/prefill step."""
+    b, s = shape.global_batch, shape.seq_len
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+    }
+    if cfg.frontend is not None:
+        specs["frontend"] = jax.ShapeDtypeStruct(
+            (b, cfg.frontend.n_embeds, cfg.d_model), jnp.float32)
+    if shape.kind != "train":
+        specs.pop("labels")
+    return specs
+
+
+def decode_specs(cfg: ArchConfig, shape: InputShape
+                 ) -> Tuple[Dict, Any, Optional[int], bool]:
+    """(token specs, cache specs, window, ring) for a serve_step.
+
+    decode_32k: full KV cache of seq_len (faithful full-attention decode).
+    long_500k: sub-quadratic only — SSM/hybrid state is O(1) anyway;
+    attention archs use the sliding-window RING buffer (window tokens
+    retained), which is the production memory layout for windowed
+    attention.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    model = build_model(cfg)
+    long_ctx = s > 65536
+    window = cfg.sliding_window if long_ctx else None
+    ring = window is not None and long_ctx
+    cache_len = min(window, s) if ring else s
+    cache = jax.eval_shape(lambda: model.init_cache(b, cache_len))
+    toks = {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+    if cfg.frontend is not None and cfg.frontend.cross_attention:
+        toks["enc"] = jax.ShapeDtypeStruct(
+            (b, cfg.frontend.n_embeds, cfg.d_model), jnp.float32)
+    return toks, cache, window, ring

@@ -1,0 +1,43 @@
+"""Activation sharding constraints (MaxText-style).
+
+With FSDP-sharded weights (output dim over ('model','data')), GSPMD must
+choose between de-sharding the BATCH or all-gathering the WEIGHT when a
+matmul output would carry the `data` axis twice.  Left alone it picks the
+batch — a catastrophic 15 GB/step activation gather (EXPERIMENTS.md
+§Perf H2).  Pinning the residual-stream activations to
+P(dp_axes, None, None) forces the cheap choice (gather the weight shard,
+classic FSDP).
+
+The launcher installs the data-parallel axis names for the ambient mesh;
+models call ``constrain_batch`` on block inputs/outputs.  With no axes
+installed (single-device tests/examples) it is a no-op.
+"""
+from __future__ import annotations
+
+import contextlib
+from contextvars import ContextVar
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_DP_AXES: ContextVar[Optional[Tuple[str, ...]]] = ContextVar(
+    "repro_dp_axes", default=None)
+
+
+@contextlib.contextmanager
+def activation_sharding(dp_axes: Tuple[str, ...]):
+    token = _DP_AXES.set(tuple(dp_axes))
+    try:
+        yield
+    finally:
+        _DP_AXES.reset(token)
+
+
+def constrain_batch(x: jax.Array) -> jax.Array:
+    """Pin dim 0 (batch) to the data-parallel axes; rest unconstrained."""
+    axes = _DP_AXES.get()
+    if axes is None:
+        return x
+    spec = P(axes, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, spec)

@@ -1,0 +1,246 @@
+"""Mamba2 (SSD) block — chunked parallel scan for train/prefill, O(1)
+recurrent state for decode.  Used by zamba2 (hybrid).
+
+Chunked SSD follows Dao & Gu 2024: within a chunk the output is a masked
+attention-like matmul (MXU-friendly); across chunks a small (H, N, P)
+state is carried by ``lax.scan``.  Decode is one state update per token —
+this is what makes the 500k-context decode shape trivially sub-quadratic.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import dense_init, init_rmsnorm, rmsnorm
+
+Params = Dict[str, Any]
+NEG_INF = -1e30
+
+
+def init_mamba2(key, cfg: ArchConfig) -> Params:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner = s.expand * d
+    h = d_inner // s.head_dim
+    n = s.state_dim
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    conv_ch = d_inner + 2 * n       # conv over [x, B, C]
+    return {
+        # SEPARATE projections (z / x / BC / dt) instead of one fused
+        # in_proj: a fused (d, 2*d_inner+2n+h) matrix must be sliced at
+        # boundaries that are not multiples of the tensor-parallel shard
+        # width, which forces GSPMD to all-gather the whole activation
+        # (3.8 GB/layer on zamba2 train_4k — EXPERIMENTS.md §Perf H2.5).
+        "w_z": dense_init(ks[0], (d, d_inner), dtype=dt),
+        "w_x": dense_init(ks[1], (d, d_inner), dtype=dt),
+        "w_bc": dense_init(ks[4], (d, 2 * n), dtype=dt),
+        "w_dt": dense_init(ks[5], (d, h), dtype=dt),
+        "conv_wx": (jax.random.normal(ks[2], (s.conv_dim, d_inner))
+                    / math.sqrt(s.conv_dim)).astype(dt),
+        "conv_bx": jnp.zeros((d_inner,), dt),
+        "conv_wbc": (jax.random.normal(ks[3], (s.conv_dim, 2 * n))
+                     / math.sqrt(s.conv_dim)).astype(dt),
+        "conv_bbc": jnp.zeros((2 * n,), dt),
+        # Mamba2 init ranges: A in [1, 16], dt ~ softplus(bias) in
+        # [1e-3, 1e-1].  These keep per-chunk cumulative decay moderate,
+        # which the separable intra-chunk form depends on (see
+        # ssd_chunked).
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.full((h,), -4.6, jnp.float32),   # softplus ~ 0.01
+        "norm": init_rmsnorm(d_inner, dt),
+        "w_out": dense_init(ks[2], (d_inner, d), dtype=dt),
+    }
+
+
+def _split_in(p: Params, cfg: ArchConfig, u: jax.Array):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    h = d_inner // s.head_dim
+    n = s.state_dim
+    z = jnp.einsum("bsd,df->bsf", u, p["w_z"])
+    xx = jnp.einsum("bsd,df->bsf", u, p["w_x"])
+    bc = jnp.einsum("bsd,df->bsf", u, p["w_bc"])
+    dt_raw = jnp.einsum("bsd,dh->bsh", u, p["w_dt"])
+    return z, xx, bc, dt_raw, d_inner, h, n
+
+
+def _causal_conv(w: jax.Array, b: jax.Array, x: jax.Array,
+                 state: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """Depthwise causal conv1d. x (B, S, C); w (K, C). state (B, K-1, C)
+    holds the trailing inputs for decode."""
+    k = w.shape[0]
+    if state is not None:
+        xx = jnp.concatenate([state, x], axis=1)          # (B, K-1+S, C)
+        new_state = xx[:, -(k - 1):, :]
+    else:
+        xx = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+        new_state = None
+    out = sum(xx[:, i:i + x.shape[1], :] * w[i] for i in range(k)) + b
+    return jax.nn.silu(out), new_state
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+                c: jax.Array, chunk: int,
+                init_state: Optional[jax.Array] = None,
+                separable: bool = True,
+                clip: float = 60.0) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    x (B,S,H,P) values, dt (B,S,H) post-softplus step sizes, a (H,)
+    negative decay, b/c (B,S,N) input/output projections (single group,
+    broadcast over heads).  Returns (y (B,S,H,P), final_state (B,H,N,P)).
+
+    ``separable=True`` (default) factors the intra-chunk decay matrix
+    exp(cum_i - cum_j) = exp(cum_i) * exp(-cum_j), so the only (i, j)
+    tensor materialised is the HEAD-FREE masked score matrix — H times
+    less HBM traffic than the naive (i, j, H) decay tensor (112x for
+    zamba2-7b; EXPERIMENTS.md §Perf).  exp(-cum_j) is clipped at e^clip
+    for stability.  EXACTNESS DOMAIN: per-chunk cumulative decay
+    |cum| = dt*|a|*chunk < clip — with Mamba2 init ranges
+    (dt ~ 0.01, |a| <= 16, chunk <= 256 -> |cum| ~ 41 < 60) the clip
+    never activates.  Outside the domain, off-diagonal terms whose true
+    magnitude is < e^(clip - |cum|) are dropped and the exact diagonal
+    correction keeps the self-contribution; relative error is bounded by
+    the dropped decayed mass (property-tested in
+    tests/test_beyond_paper.py).
+    """
+    bb, s, h, pp = x.shape
+    n = b.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    xc = x.reshape(bb, nc, chunk, h, pp)
+    dtc = dt.reshape(bb, nc, chunk, h)
+    bc = b.reshape(bb, nc, chunk, n)
+    cc = c.reshape(bb, nc, chunk, n)
+
+    da = dtc * a                                          # (B,nc,L,H) <= 0
+    cum = jnp.cumsum(da, axis=2)
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    scores = jnp.einsum("bcin,bcjn->bcij", cc.astype(jnp.float32),
+                        bc.astype(jnp.float32))
+    if separable:
+        pos = jnp.exp(cum)                                # (B,nc,L,H) <= 1
+        neg = jnp.exp(jnp.minimum(-cum, clip))
+        bj = (neg * dtc)[..., None] * xc.astype(jnp.float32)
+        masked = jnp.where(tri[None, None], scores, 0.0)
+        acc = jnp.einsum("bcij,bcjhp->bcihp", masked, bj)
+        y_intra = pos[..., None] * acc
+        # exact diagonal (M_ii == 1): under extreme decay the clip zeroes
+        # pos*neg on the diagonal, but the self-contribution never decays
+        # — restore it exactly.
+        diag_scores = jnp.einsum("bcin,bcin->bci",
+                                 cc.astype(jnp.float32),
+                                 bc.astype(jnp.float32))
+        corr = (1.0 - pos * neg) * dtc                    # (B,nc,L,H)
+        y_intra = y_intra + (diag_scores[..., None] * corr)[..., None] \
+            * xc.astype(jnp.float32)
+    else:
+        # naive (i, j, H) decay tensor — reference path
+        diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]
+        m = jnp.exp(jnp.where(tri[None, None, :, :, None], diff, NEG_INF))
+        y_intra = jnp.einsum("bcij,bcijh,bcjh,bcjhp->bcihp", scores, m,
+                             dtc, xc.astype(jnp.float32))
+
+    # chunk-boundary states
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)       # (B,nc,L,H)
+    chunk_states = jnp.einsum("bcjn,bcjh,bcjhp->bchnp",
+                              bc.astype(jnp.float32), dtc * decay_to_end,
+                              xc.astype(jnp.float32))     # (B,nc,H,N,P)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])               # (B,nc,H)
+
+    s0 = (init_state if init_state is not None
+          else jnp.zeros((bb, h, n, pp), jnp.float32))
+
+    def step(state, inp):
+        dec, st = inp                                     # (B,H), (B,H,N,P)
+        prev = state
+        new = dec[..., None, None] * state + st
+        return new, prev
+
+    final, prev_states = jax.lax.scan(
+        step, s0, (chunk_decay.transpose(1, 0, 2),
+                   chunk_states.transpose(1, 0, 2, 3, 4)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)    # (B,nc,H,N,P)
+
+    y_inter = jnp.einsum("bcin,bchnp,bcih->bcihp", cc.astype(jnp.float32),
+                         prev_states, jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(bb, s, h, pp)
+    return y, final
+
+
+def mamba2_forward(p: Params, cfg: ArchConfig, u: jax.Array
+                   ) -> jax.Array:
+    """Full-sequence Mamba2 block (train / prefill)."""
+    s = cfg.ssm
+    z, xx, bc, dt_raw, d_inner, h, n = _split_in(p, cfg, u)
+    x, _ = _causal_conv(p["conv_wx"], p["conv_bx"], xx)
+    bc, _ = _causal_conv(p["conv_wbc"], p["conv_bbc"], bc)
+    b = bc[..., :n]
+    c = bc[..., n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    # pad sequence to chunk multiple
+    seq = u.shape[1]
+    chunk = min(s.chunk, seq)
+    pad = (-seq) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    xh = x.reshape(x.shape[0], x.shape[1], h, s.head_dim)
+    y, _ = ssd_chunked(xh, dt, a, b, c, chunk)
+    y = y + p["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y[:, :seq].reshape(u.shape[0], seq, d_inner).astype(u.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(p["norm"], y, cfg.norm_eps)
+    return jnp.einsum("bsf,fd->bsd", y, p["w_out"])
+
+
+def mamba2_init_cache(cfg: ArchConfig, batch: int, dtype) -> Dict:
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    h = d_inner // s.head_dim
+    conv_ch = d_inner + 2 * s.state_dim
+    return {
+        "conv_x": jnp.zeros((batch, s.conv_dim - 1, d_inner), dtype),
+        "conv_bc": jnp.zeros((batch, s.conv_dim - 1, 2 * s.state_dim),
+                             dtype),
+        "ssm": jnp.zeros((batch, h, s.state_dim, s.head_dim), jnp.float32),
+    }
+
+
+def mamba2_decode(p: Params, cfg: ArchConfig, u: jax.Array, cache: Dict
+                  ) -> Tuple[jax.Array, Dict]:
+    """One-token (or few-token) recurrent step.  u (B, 1, d)."""
+    s = cfg.ssm
+    z, xx, bc, dt_raw, d_inner, h, n = _split_in(p, cfg, u)
+    x, conv_x = _causal_conv(p["conv_wx"], p["conv_bx"], xx,
+                             state=cache["conv_x"])
+    bc, conv_bc = _causal_conv(p["conv_wbc"], p["conv_bbc"], bc,
+                               state=cache["conv_bc"])
+    b = bc[..., :n]
+    c = bc[..., n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,1,H)
+    a = -jnp.exp(p["a_log"])
+    xh = x.reshape(x.shape[0], 1, h, s.head_dim).astype(jnp.float32)
+    # state update: S = exp(dt a) S + dt * B (x outer)  — single step
+    decay = jnp.exp(dt[:, 0, :, None, None] * a[None, :, None, None])
+    inject = jnp.einsum("bn,bh,bhp->bhnp", b[:, 0].astype(jnp.float32),
+                        dt[:, 0], xh[:, 0])
+    state = decay * cache["ssm"] + inject
+    y = jnp.einsum("bn,bhnp->bhp", c[:, 0].astype(jnp.float32), state)
+    y = y + p["d_skip"][None, :, None] * xh[:, 0]
+    y = y.reshape(u.shape[0], 1, d_inner).astype(u.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(p["norm"], y, cfg.norm_eps)
+    out = jnp.einsum("bsf,fd->bsd", y, p["w_out"])
+    return out, {"conv_x": conv_x, "conv_bc": conv_bc, "ssm": state}

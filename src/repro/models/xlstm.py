@@ -1,0 +1,173 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory with
+exponential gating), both as stabilised recurrent ``lax.scan``s.
+
+The recurrent formulation is exact for both train and decode (the
+chunkwise-parallel mLSTM kernel is a perf lever, not a semantics change)
+and is what makes xlstm-125m sub-quadratic for the 500k decode shape:
+decode carries a constant-size (H, Dh, Dh) matrix state.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import dense_init, init_rmsnorm, rmsnorm
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg: ArchConfig) -> Params:
+    d = cfg.d_model
+    x = cfg.xlstm
+    d_inner = x.mlstm_expand * d
+    h = cfg.n_heads
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": dense_init(ks[0], (d, 2 * d_inner), dtype=dt),  # [x, gate z]
+        "wq": dense_init(ks[1], (d_inner, d_inner), dtype=dt),
+        "wk": dense_init(ks[2], (d_inner, d_inner), dtype=dt),
+        "wv": dense_init(ks[3], (d_inner, d_inner), dtype=dt),
+        "wi": dense_init(ks[4], (d_inner, h), dtype=jnp.float32),
+        "wf": dense_init(ks[5], (d_inner, h), dtype=jnp.float32),
+        "bi": jnp.zeros((h,), jnp.float32),
+        "bf": jnp.full((h,), 3.0, jnp.float32),   # open forget gates at init
+        "norm": init_rmsnorm(d_inner, dt),
+        "w_down": dense_init(ks[6], (d_inner, d), dtype=dt),
+    }
+
+
+def _mlstm_scan(q, k, v, i_pre, f_pre, state):
+    """Stabilised mLSTM recurrence.  q/k/v (B,S,H,P); i/f (B,S,H).
+    state: dict(c (B,H,P,P), n (B,H,P), m (B,H)).  Returns (y, state)."""
+    b, s, h, p = q.shape
+
+    def step(st, inp):
+        qt, kt, vt, it, ft = inp                   # (B,H,P)... (B,H)
+        logf = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(logf + st["m"], it)
+        i_ = jnp.exp(it - m_new)
+        f_ = jnp.exp(logf + st["m"] - m_new)
+        c = f_[..., None, None] * st["c"] + \
+            i_[..., None, None] * kt[..., :, None] * vt[..., None, :]
+        n = f_[..., None] * st["n"] + i_[..., None] * kt
+        hn = jnp.einsum("bhp,bhpo->bho", qt, c)
+        denom = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", qt, st_n := n)),
+                            jnp.exp(-m_new))[..., None]
+        y = hn / denom
+        return {"c": c, "n": n, "m": m_new}, y
+
+    scale = p ** -0.5
+    xs = (q.transpose(1, 0, 2, 3).astype(jnp.float32) * scale,
+          k.transpose(1, 0, 2, 3).astype(jnp.float32) * scale,
+          v.transpose(1, 0, 2, 3).astype(jnp.float32),
+          i_pre.transpose(1, 0, 2), f_pre.transpose(1, 0, 2))
+    state, ys = jax.lax.scan(step, state, xs)
+    return ys.transpose(1, 0, 2, 3), state        # (B,S,H,P)
+
+
+def mlstm_init_state(cfg: ArchConfig, batch: int) -> Dict:
+    d_inner = cfg.xlstm.mlstm_expand * cfg.d_model
+    h = cfg.n_heads
+    p = d_inner // h
+    return {"c": jnp.zeros((batch, h, p, p), jnp.float32),
+            "n": jnp.zeros((batch, h, p), jnp.float32),
+            "m": jnp.full((batch, h), -1e30, jnp.float32)}
+
+
+def mlstm_forward(p: Params, cfg: ArchConfig, u: jax.Array,
+                  state: Optional[Dict] = None
+                  ) -> Tuple[jax.Array, Dict]:
+    b, s, d = u.shape
+    x = cfg.xlstm
+    d_inner = x.mlstm_expand * d
+    h = cfg.n_heads
+    ph = d_inner // h
+    up = jnp.einsum("bsd,df->bsf", u, p["w_up"])
+    xin, z = up[..., :d_inner], up[..., d_inner:]
+    q = jnp.einsum("bsf,fg->bsg", xin, p["wq"]).reshape(b, s, h, ph)
+    k = jnp.einsum("bsf,fg->bsg", xin, p["wk"]).reshape(b, s, h, ph)
+    v = jnp.einsum("bsf,fg->bsg", xin, p["wv"]).reshape(b, s, h, ph)
+    i_pre = jnp.einsum("bsf,fh->bsh", xin.astype(jnp.float32), p["wi"]) + p["bi"]
+    f_pre = jnp.einsum("bsf,fh->bsh", xin.astype(jnp.float32), p["wf"]) + p["bf"]
+    if state is None:
+        state = mlstm_init_state(cfg, b)
+    y, state = _mlstm_scan(q, k, v, i_pre, f_pre, state)
+    y = y.reshape(b, s, d_inner).astype(u.dtype) * jax.nn.silu(z)
+    y = rmsnorm(p["norm"], y, cfg.norm_eps)
+    return jnp.einsum("bsf,fd->bsd", y, p["w_down"]), state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg: ArchConfig) -> Params:
+    d = cfg.d_model
+    h = cfg.n_heads
+    ph = d // h
+    x = cfg.xlstm
+    d_ff = int(d * x.slstm_ff_mult)
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 7)
+    return {
+        "w_zifo": dense_init(ks[0], (d, 4 * d), dtype=dt),
+        # block-diagonal recurrent weights, per head: (H, P, 4P)
+        "r_zifo": (jax.random.normal(ks[1], (h, ph, 4 * ph))
+                   / math.sqrt(ph)).astype(jnp.float32),
+        "b_zifo": jnp.zeros((4 * d,), jnp.float32)
+                  .at[2 * d:3 * d].set(3.0),       # forget-gate bias
+        "norm": init_rmsnorm(d, dt),
+        "w_ff1": dense_init(ks[2], (d, d_ff), dtype=dt),
+        "w_ff2": dense_init(ks[3], (d_ff, d), dtype=dt),
+    }
+
+
+def slstm_init_state(cfg: ArchConfig, batch: int) -> Dict:
+    d = cfg.d_model
+    return {"c": jnp.zeros((batch, d), jnp.float32),
+            "n": jnp.ones((batch, d), jnp.float32),
+            "h": jnp.zeros((batch, d), jnp.float32),
+            "m": jnp.zeros((batch, d), jnp.float32)}
+
+
+def slstm_forward(p: Params, cfg: ArchConfig, u: jax.Array,
+                  state: Optional[Dict] = None
+                  ) -> Tuple[jax.Array, Dict]:
+    b, s, d = u.shape
+    h = cfg.n_heads
+    ph = d // h
+    pre = jnp.einsum("bsd,df->bsf", u, p["w_zifo"]).astype(jnp.float32)
+    if state is None:
+        state = slstm_init_state(cfg, b)
+
+    def step(st, x_t):                             # x_t (B, 4d)
+        hh = st["h"].reshape(b, h, ph)
+        rec = jnp.einsum("bhp,hpf->bhf", hh, p["r_zifo"]).reshape(b, 4 * d)
+        zifo = x_t + rec + p["b_zifo"]
+        z_, i_, f_, o_ = jnp.split(zifo, 4, axis=-1)
+        z = jnp.tanh(z_)
+        o = jax.nn.sigmoid(o_)
+        logf = jax.nn.log_sigmoid(f_)
+        m_new = jnp.maximum(logf + st["m"], i_)
+        i_s = jnp.exp(i_ - m_new)
+        f_s = jnp.exp(logf + st["m"] - m_new)
+        c = f_s * st["c"] + i_s * z
+        n = f_s * st["n"] + i_s
+        h_new = o * c / jnp.maximum(n, 1e-6)
+        return {"c": c, "n": n, "h": h_new, "m": m_new}, h_new
+
+    state, ys = jax.lax.scan(step, state, pre.transpose(1, 0, 2))
+    y = ys.transpose(1, 0, 2).astype(u.dtype)      # (B,S,d)
+    y = rmsnorm(p["norm"], y, cfg.norm_eps)
+    ff = jnp.einsum("bsf,fg->bsg", y, p["w_ff1"])
+    out = jnp.einsum("bsg,gd->bsd", jax.nn.gelu(ff), p["w_ff2"])
+    return out, state

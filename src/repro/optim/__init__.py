@@ -1,0 +1,3 @@
+from repro.optim.adamw import adamw, sgd_momentum
+from repro.optim.schedule import noam_schedule, cosine_schedule, constant_schedule
+from repro.optim.base import Optimizer, apply_updates

@@ -1,0 +1,90 @@
+"""AdamW and SGD-momentum, pytree-native."""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import Optimizer
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    mu: object      # pytree like params
+    nu: object      # pytree like params
+
+
+def _as_schedule(lr) -> Callable:
+    if callable(lr):
+        return lr
+    return lambda step: jnp.float32(lr)
+
+
+def adamw(lr: Union[float, Callable] = 1e-3, b1: float = 0.9,
+          b2: float = 0.98, eps: float = 1e-9,
+          weight_decay: float = 0.0) -> Optimizer:
+    """AdamW with the paper's transformer defaults (b2=0.98, eps=1e-9)."""
+    sched = _as_schedule(lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return AdamState(step=jnp.zeros((), jnp.int32),
+                         mu=jax.tree_util.tree_map(zeros, params),
+                         nu=jax.tree_util.tree_map(zeros, params))
+
+    def update(grads, state, params):
+        step = state.step + 1
+        lr_t = sched(step)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mhat = m / bc1
+            vhat = v / bc2
+            u = -lr_t * (mhat / (jnp.sqrt(vhat) + eps)
+                         + weight_decay * p.astype(jnp.float32))
+            return u, m, v
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_m = jax.tree_util.tree_leaves(state.mu)
+        flat_v = jax.tree_util.tree_leaves(state.nu)
+        flat_p = jax.tree_util.tree_leaves(params)
+        out = [upd(g, m, v, p) for g, m, v, p in
+               zip(flat_g, flat_m, flat_v, flat_p)]
+        updates = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+        mu = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+        nu = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+        return updates, AdamState(step=step, mu=mu, nu=nu)
+
+    return Optimizer(init=init, update=update)
+
+
+class MomentumState(NamedTuple):
+    step: jax.Array
+    velocity: object
+
+
+def sgd_momentum(lr: Union[float, Callable] = 1e-2,
+                 momentum: float = 0.9) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        return MomentumState(
+            step=jnp.zeros((), jnp.int32),
+            velocity=jax.tree_util.tree_map(
+                lambda p: jnp.zeros_like(p, dtype=jnp.float32), params))
+
+    def update(grads, state, params):
+        step = state.step + 1
+        lr_t = sched(step)
+        vel = jax.tree_util.tree_map(
+            lambda v, g: momentum * v + g.astype(jnp.float32),
+            state.velocity, grads)
+        updates = jax.tree_util.tree_map(lambda v: -lr_t * v, vel)
+        return updates, MomentumState(step=step, velocity=vel)
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,24 @@
+"""Minimal optax-like optimizer API (built in-repo, no external deps)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    """A gradient transformation: ``init(params) -> state``,
+    ``update(grads, state, params) -> (updates, state)``.
+
+    ``updates`` are ADDED to params (sign convention: update includes -lr).
+    """
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Tuple[Any, Any]]
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(lambda p, u: (p + u).astype(p.dtype),
+                                  params, updates)

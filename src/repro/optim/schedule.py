@@ -1,0 +1,38 @@
+"""Learning-rate schedules.
+
+``noam_schedule`` is the transformer schedule used by the paper's model
+(Vaswani et al. 2017 eq. 3): lr = d_model^-0.5 * min(t^-0.5, t * w^-1.5).
+The paper follows Popel & Bojar / Ott et al. best practices (warmup +
+inverse-sqrt), which this reproduces.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def noam_schedule(d_model: int, warmup_steps: int = 4000, scale: float = 2.0):
+    def lr(step):
+        t = jnp.maximum(step.astype(jnp.float32) if hasattr(step, "astype")
+                        else jnp.float32(step), 1.0)
+        return scale * d_model ** -0.5 * jnp.minimum(
+            t ** -0.5, t * warmup_steps ** -1.5)
+    return lr
+
+
+def cosine_schedule(peak_lr: float, warmup_steps: int, total_steps: int,
+                    min_ratio: float = 0.1):
+    def lr(step):
+        t = jnp.float32(step)
+        warm = peak_lr * t / jnp.maximum(warmup_steps, 1)
+        frac = jnp.clip((t - warmup_steps) /
+                        jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = peak_lr * (min_ratio + (1 - min_ratio) *
+                         0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(t < warmup_steps, warm, cos)
+    return lr
+
+
+def constant_schedule(lr_value: float):
+    def lr(step):
+        return jnp.float32(lr_value)
+    return lr

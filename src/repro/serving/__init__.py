@@ -1,0 +1,2 @@
+from repro.serving.engine import ServeEngine, sample_greedy
+from repro.serving.scheduler import ContinuousBatcher, Request, SchedulerStats

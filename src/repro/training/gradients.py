@@ -1,0 +1,67 @@
+"""Gradient computation with faithful sparse-embedding instrumentation.
+
+``sparse_embedding=False``: ordinary dense autodiff.  The embedding
+cotangent is the scatter-add-densified tensor — mathematically the output
+of the paper's sparse_as_dense path (this is why the production GSPMD
+launcher can use plain autodiff once the fix is on).
+
+``sparse_embedding=True``: reproduces TensorFlow's behaviour.  The lookup
+runs through a zero ``tap`` with the table stop-gradiented, so autodiff
+yields the PER-TOKEN rows — ``tf.gather``'s IndexedSlices, duplicates and
+all.  For tied-embedding models the table additionally receives the DENSE
+cotangent from the projection matmul, giving the mixed sparse+dense
+contribution list that trips TF's Algorithm 1 (see paper §3).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.indexed_slices import IndexedSlices
+
+
+def grad_contributions(model, params, batch: Dict[str, jax.Array],
+                       sparse_embedding: bool = False,
+                       **loss_kw) -> Tuple[Any, jax.Array, Dict]:
+    """Returns (grad-contribution pytree, loss, metrics).
+
+    The returned pytree matches ``params``, except that under
+    ``sparse_embedding=True`` the ``embedding`` leaf is a LIST of
+    contributions ([IndexedSlices] or [IndexedSlices, dense]) ready for
+    ``core.accumulation``.
+    """
+    if not sparse_embedding:
+        def loss_fn(p):
+            return model.loss(p, batch, **loss_kw)
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        return grads, loss, metrics
+
+    cfg = model.cfg
+    tokens = batch["tokens"]
+    taps = jnp.zeros(tokens.shape + (cfg.d_model,),
+                     params["embedding"].dtype)
+
+    def loss_fn(p, t):
+        return model.loss(p, batch, taps=t, **loss_kw)
+
+    (loss, metrics), (g_params, g_taps) = jax.value_and_grad(
+        loss_fn, argnums=(0, 1), has_aux=True)(params, taps)
+    slices = IndexedSlices(
+        indices=tokens.reshape(-1).astype(jnp.int32),
+        values=g_taps.reshape(-1, cfg.d_model),
+        dense_shape=tuple(params["embedding"].shape))
+    if cfg.tied_embeddings:
+        # table got the dense cotangent from the tied projection matmul;
+        # together with the sparse lookup cotangent this is the paper's
+        # Algorithm-1 trigger.
+        g_params = dict(g_params)
+        g_params["embedding"] = [slices, g_params["embedding"]]
+    else:
+        # table's autodiff cotangent is identically zero (stop_gradient);
+        # the single sparse contribution replaces it.
+        g_params = dict(g_params)
+        g_params["embedding"] = [slices]
+    return g_params, loss, metrics

@@ -1,0 +1,182 @@
+"""Microbatch gradient accumulation + dynamic loss scaling.
+
+The paper trains with global batches up to 1.5M tokens by adding workers;
+when HBM, not worker count, is the limit, the same global batch comes
+from ACCUMULATING microbatch gradients locally before the (single)
+cross-worker exchange — which also amortises the paper's collective cost
+over more tokens.  ``accumulate_microbatches`` folds a (M, ...) stacked
+batch through the loss with a lax.scan, summing LOCAL gradients; the
+DistributedOptimizer then exchanges once.
+
+``LossScaler`` implements standard dynamic loss scaling for bf16/f16
+training (Ott et al. 2018, the paper's ref [12]): scale up every
+``growth_interval`` good steps, halve and SKIP the step on non-finite
+gradients.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.training.gradients import grad_contributions
+from repro.core.indexed_slices import IndexedSlices
+
+
+def split_microbatches(batch: Dict[str, jax.Array], n: int
+                       ) -> Dict[str, jax.Array]:
+    """(B, ...) -> (n, B/n, ...) per leaf."""
+    def split(x):
+        b = x.shape[0]
+        assert b % n == 0, (b, n)
+        return x.reshape((n, b // n) + x.shape[1:])
+    return jax.tree_util.tree_map(split, batch)
+
+
+def accumulate_microbatches(model, params, stacked_batch,
+                            sparse_embedding: bool = False,
+                            **loss_kw) -> Tuple[Any, jax.Array, Dict]:
+    """Mean of per-microbatch gradients via lax.scan (O(1) live memory
+    in the microbatch count).  Sparse embedding contributions are
+    accumulated by CONCATENATION (the faithful representation: each
+    microbatch contributes its own token rows) — so the paper's
+    gather-vs-reduce choice applies to microbatching too."""
+    n = jax.tree_util.tree_leaves(stacked_batch)[0].shape[0]
+
+    def one(mb):
+        return grad_contributions(model, params, mb,
+                                  sparse_embedding=sparse_embedding,
+                                  **loss_kw)
+
+    if not sparse_embedding:
+        def body(carry, mb):
+            acc, loss_sum = carry
+            g, loss, _ = one(mb)
+            acc = jax.tree_util.tree_map(jnp.add, acc, g)
+            return (acc, loss_sum + loss), None
+
+        mb0 = jax.tree_util.tree_map(lambda x: x[0], stacked_batch)
+        g0, loss0, metrics0 = one(mb0)
+        rest = jax.tree_util.tree_map(lambda x: x[1:], stacked_batch)
+        (acc, loss_sum), _ = jax.lax.scan(body, (g0, loss0), rest)
+        grads = jax.tree_util.tree_map(lambda g: g / n, acc)
+        return grads, loss_sum / n, metrics0
+
+    # sparse path: dense leaves summed, IndexedSlices concatenated —
+    # python loop (contribution lists are not scan-able pytrees)
+    grads_list, losses = [], []
+    for i in range(n):
+        mb = jax.tree_util.tree_map(lambda x: x[i], stacked_batch)
+        g, loss, m = one(mb)
+        grads_list.append(g)
+        losses.append(loss)
+
+    def combine(*leaves):
+        if isinstance(leaves[0], list):          # contribution lists
+            out = []
+            for contribs in zip(*leaves):
+                if isinstance(contribs[0], IndexedSlices):
+                    idx = jnp.concatenate([c.indices for c in contribs])
+                    vals = jnp.concatenate([c.values for c in contribs]) / n
+                    out.append(IndexedSlices(idx, vals,
+                                             contribs[0].dense_shape))
+                else:
+                    out.append(sum(contribs) / n)
+            return out
+        return sum(leaves) / n
+
+    grads = jax.tree_util.tree_map(
+        combine, *grads_list,
+        is_leaf=lambda x: isinstance(x, (list, IndexedSlices)))
+    return grads, sum(losses) / n, {}
+
+
+class ScalerState(NamedTuple):
+    scale: jax.Array           # current loss scale
+    good_steps: jax.Array      # consecutive finite-grad steps
+
+
+@dataclasses.dataclass(frozen=True)
+class LossScaler:
+    init_scale: float = 2.0 ** 15
+    growth_factor: float = 2.0
+    backoff_factor: float = 0.5
+    growth_interval: int = 200
+
+    def init(self) -> ScalerState:
+        return ScalerState(scale=jnp.float32(self.init_scale),
+                           good_steps=jnp.int32(0))
+
+    def scale_loss(self, loss: jax.Array, state: ScalerState) -> jax.Array:
+        return loss * state.scale
+
+    def unscale_and_check(self, grads, state: ScalerState):
+        """Returns (unscaled grads, finite flag, new state).  On overflow
+        the caller must SKIP the update (see make_scaled_train_step)."""
+        finite = jnp.array(True)
+        for g in jax.tree_util.tree_leaves(grads):
+            finite &= jnp.all(jnp.isfinite(g))
+        grads = jax.tree_util.tree_map(
+            lambda g: (g / state.scale).astype(g.dtype), grads)
+        new_scale = jnp.where(
+            finite,
+            jnp.where(state.good_steps + 1 >= self.growth_interval,
+                      state.scale * self.growth_factor, state.scale),
+            jnp.maximum(state.scale * self.backoff_factor, 1.0))
+        new_good = jnp.where(
+            finite,
+            jnp.where(state.good_steps + 1 >= self.growth_interval,
+                      0, state.good_steps + 1),
+            0)
+        return grads, finite, ScalerState(new_scale, new_good)
+
+
+def make_scaled_train_step(model, opt, scaler: LossScaler,
+                           n_microbatches: int = 1,
+                           sparse_embedding: bool = False,
+                           **loss_kw) -> Callable:
+    """Train step with loss scaling + optional microbatch accumulation.
+    Overflow steps leave params/opt_state untouched (scale backs off)."""
+    from repro.optim.base import apply_updates
+
+    def step(params, opt_state, scaler_state, batch):
+        def loss_fn(p, b):
+            if n_microbatches > 1:
+                stacked = split_microbatches(b, n_microbatches)
+                g, loss, metrics = accumulate_microbatches(
+                    model, p, stacked, sparse_embedding=sparse_embedding,
+                    **loss_kw)
+            else:
+                g, loss, metrics = grad_contributions(
+                    model, p, b, sparse_embedding=sparse_embedding,
+                    **loss_kw)
+            return g, loss, metrics
+
+        # scale by differentiating the SCALED loss: equivalent to grad*scale
+        grads, loss, metrics = loss_fn(params, batch)
+        grads = jax.tree_util.tree_map(
+            lambda g: g * scaler_state.scale if not isinstance(g, list)
+            else [c * scaler_state.scale if not isinstance(c, IndexedSlices)
+                  else IndexedSlices(c.indices,
+                                     c.values * scaler_state.scale,
+                                     c.dense_shape) for c in g],
+            grads, is_leaf=lambda x: isinstance(x, list))
+        dense = opt.exchange(grads)
+        dense, finite, scaler_state = scaler.unscale_and_check(
+            dense, scaler_state)
+        updates, new_opt_state = opt.base.update(dense, opt_state, params)
+        new_params = apply_updates(params, updates)
+        params = jax.tree_util.tree_map(
+            lambda new, old: jnp.where(finite, new, old),
+            new_params, params)
+        opt_state = jax.tree_util.tree_map(
+            lambda new, old: jnp.where(finite, new, old),
+            new_opt_state, opt_state)
+        metrics = dict(metrics, loss=loss,
+                       loss_scale=scaler_state.scale,
+                       overflow=~finite)
+        return params, opt_state, scaler_state, metrics
+
+    return step

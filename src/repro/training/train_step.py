@@ -1,0 +1,34 @@
+"""Train step factory: loss -> contributions -> exchange -> update.
+
+The returned step works both single-device (axis_name=None on the
+DistributedOptimizer) and inside ``shard_map`` over the data-parallel
+mesh axes (the Horovod-faithful mode used by the launcher and the
+multi-worker tests).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+
+from repro.core.dist_opt import DistributedOptimizer
+from repro.optim.base import apply_updates
+from repro.training.gradients import grad_contributions
+
+
+def make_train_step(model, opt: DistributedOptimizer,
+                    sparse_embedding: bool = False,
+                    **loss_kw) -> Callable:
+    """Returns step(params, opt_state, batch) -> (params, opt_state,
+    metrics)."""
+
+    def step(params, opt_state, batch):
+        grads, loss, metrics = grad_contributions(
+            model, params, batch, sparse_embedding=sparse_embedding,
+            **loss_kw)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        metrics = dict(metrics, loss=loss)
+        return params, opt_state, metrics
+
+    return step

@@ -1,0 +1,65 @@
+"""Trainer: the end-to-end loop (data -> step -> metrics -> checkpoint)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import save_checkpoint, restore_checkpoint, latest_step
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    log_every: int = 10
+    checkpoint_every: int = 0          # 0 disables
+    checkpoint_dir: Optional[str] = None
+    resume: bool = False
+
+
+@dataclasses.dataclass
+class Trainer:
+    model: Any
+    step_fn: Callable                   # (params, opt_state, batch) -> ...
+    pipeline: Any                       # iterable of host batches
+    config: TrainerConfig
+
+    def run(self, params, opt_state, log: Callable[[str], None] = print
+            ) -> Dict[str, Any]:
+        cfg = self.config
+        start_step = 0
+        if cfg.resume and cfg.checkpoint_dir:
+            s = latest_step(cfg.checkpoint_dir)
+            if s is not None:
+                (params, opt_state), start_step = restore_checkpoint(
+                    cfg.checkpoint_dir, (params, opt_state), step=s)
+                log(f"resumed from step {start_step}")
+
+        jit_step = jax.jit(self.step_fn)
+        history: List[Dict[str, float]] = []
+        tokens_seen = 0
+        t0 = time.perf_counter()
+        for step in range(start_step, cfg.total_steps):
+            batch = {k: jax.numpy.asarray(v)
+                     for k, v in self.pipeline.batch_at(step).items()}
+            params, opt_state, metrics = jit_step(params, opt_state, batch)
+            tokens_seen += int(np.prod(batch["tokens"].shape))
+            if (step + 1) % cfg.log_every == 0 or step == cfg.total_steps - 1:
+                m = {k: float(v) for k, v in metrics.items()
+                     if np.ndim(v) == 0}
+                dt = time.perf_counter() - t0
+                m.update(step=step + 1, tokens=tokens_seen,
+                         tok_per_s=tokens_seen / max(dt, 1e-9))
+                history.append(m)
+                log(f"step {step+1}: loss={m.get('loss', float('nan')):.4f} "
+                    f"ce={m.get('ce', float('nan')):.4f} "
+                    f"tok/s={m['tok_per_s']:.0f}")
+            if (cfg.checkpoint_every and cfg.checkpoint_dir
+                    and (step + 1) % cfg.checkpoint_every == 0):
+                save_checkpoint(cfg.checkpoint_dir, step + 1,
+                                (params, opt_state))
+        return {"params": params, "opt_state": opt_state,
+                "history": history}

@@ -1,0 +1,153 @@
+"""Property tests for the paper's accumulation algorithms (Alg. 1 / 2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (IndexedSlices, accumulate_gradients, densify,
+                        dense_to_slices, accumulated_nbytes, concat_slices)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _slices(rng, n, v, d):
+    idx = rng.integers(0, v, size=(n,)).astype(np.int32)
+    vals = rng.standard_normal((n, d)).astype(np.float32)
+    return IndexedSlices(jnp.asarray(idx), jnp.asarray(vals), (v, d))
+
+
+@st.composite
+def contributions(draw):
+    """A mixed list of dense / sparse contributions for one (v, d) var."""
+    v = draw(st.integers(2, 40))
+    d = draw(st.integers(1, 16))
+    n_contrib = draw(st.integers(1, 5))
+    kinds = draw(st.lists(st.booleans(), min_size=n_contrib,
+                          max_size=n_contrib))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    out = []
+    for sparse in kinds:
+        if sparse:
+            n = int(rng.integers(1, 3 * v))
+            out.append(_slices(rng, n, v, d))
+        else:
+            out.append(jnp.asarray(
+                rng.standard_normal((v, d)).astype(np.float32)))
+    return out
+
+
+def _dense_sum(grads):
+    return sum(densify(g) for g in grads)
+
+
+@given(contributions())
+@settings(max_examples=60, deadline=None)
+def test_algorithms_agree_numerically(grads):
+    """Alg. 1, Alg. 2 and sparse_as_dense all produce the same SUM —
+    the representations differ, the math must not (paper §5.3)."""
+    expected = _dense_sum(grads)
+    for algorithm in ("tf_algorithm1", "proposed_algorithm2"):
+        for sad in (False, True):
+            out = accumulate_gradients(grads, algorithm=algorithm,
+                                       sparse_as_dense=sad)
+            np.testing.assert_allclose(densify(out), expected,
+                                       rtol=2e-5, atol=2e-5)
+
+
+@given(contributions())
+@settings(max_examples=60, deadline=None)
+def test_algorithm1_representation(grads):
+    """Paper Algorithm 1: ANY sparse input (with >= 2 contributions)
+    downgrades the result to IndexedSlices (gather)."""
+    out = accumulate_gradients(grads, algorithm="tf_algorithm1")
+    any_sparse = any(isinstance(g, IndexedSlices) for g in grads)
+    if len(grads) < 2:
+        assert type(out) is type(grads[0])
+    elif any_sparse:
+        assert isinstance(out, IndexedSlices)
+        # gather: row count is the SUM over contributions (incl. the
+        # dense ones downgraded to all-rows slices)
+        rows = sum(g.indices.shape[0] if isinstance(g, IndexedSlices)
+                   else g.shape[0] for g in grads)
+        assert out.indices.shape[0] == rows
+    else:
+        assert not isinstance(out, IndexedSlices)
+
+
+@given(contributions())
+@settings(max_examples=60, deadline=None)
+def test_algorithm2_representation(grads):
+    """Paper Algorithm 2: ANY dense input -> dense (reduce); only
+    all-sparse stays sparse."""
+    out = accumulate_gradients(grads, algorithm="proposed_algorithm2")
+    any_dense = any(not isinstance(g, IndexedSlices) for g in grads)
+    if len(grads) < 2:
+        assert type(out) is type(grads[0])
+    elif any_dense:
+        assert not isinstance(out, IndexedSlices)
+    else:
+        assert isinstance(out, IndexedSlices)
+
+
+@given(contributions())
+@settings(max_examples=40, deadline=None)
+def test_sparse_as_dense_always_dense(grads):
+    """Horovod Listing 1: with the pre-pass, the accumulated result is
+    always a dense Tensor, under either algorithm."""
+    for algorithm in ("tf_algorithm1", "proposed_algorithm2"):
+        out = accumulate_gradients(grads, algorithm=algorithm,
+                                   sparse_as_dense=True)
+        assert not isinstance(out, IndexedSlices)
+
+
+@given(contributions())
+@settings(max_examples=40, deadline=None)
+def test_memory_blowup_direction(grads):
+    """When Alg. 1 degrades to gather, the accumulated bytes are >= the
+    dense representation (the paper's Fig. 5 inequality)."""
+    if len(grads) < 2:
+        return
+    a1 = accumulate_gradients(grads, algorithm="tf_algorithm1")
+    sad = accumulate_gradients(grads, algorithm="tf_algorithm1",
+                               sparse_as_dense=True)
+    if isinstance(a1, IndexedSlices):
+        v, d = a1.dense_shape
+        # ONLY a true inequality once total gathered rows >= vocab rows
+        if a1.indices.shape[0] >= v:
+            assert accumulated_nbytes(a1) >= accumulated_nbytes(sad)
+
+
+def test_dense_to_slices_roundtrip():
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.standard_normal((7, 3)).astype(np.float32))
+    s = dense_to_slices(g)
+    np.testing.assert_allclose(densify(s), g)
+
+
+def test_concat_slices_sums_duplicates():
+    a = IndexedSlices(jnp.array([0, 1], jnp.int32), jnp.ones((2, 2)), (3, 2))
+    b = IndexedSlices(jnp.array([1, 2], jnp.int32), jnp.ones((2, 2)), (3, 2))
+    c = concat_slices((a, b))
+    np.testing.assert_allclose(
+        densify(c), jnp.array([[1, 1], [2, 2], [1, 1]], jnp.float32))
+
+
+def test_concat_slices_shape_mismatch_raises():
+    a = IndexedSlices(jnp.array([0], jnp.int32), jnp.ones((1, 2)), (3, 2))
+    b = IndexedSlices(jnp.array([0], jnp.int32), jnp.ones((1, 2)), (4, 2))
+    with pytest.raises(ValueError):
+        concat_slices((a, b))
+
+
+def test_indexed_slices_is_pytree():
+    s = IndexedSlices(jnp.array([0, 2], jnp.int32),
+                      jnp.ones((2, 4)), (5, 4))
+    leaves = jax.tree_util.tree_leaves(s)
+    assert len(leaves) == 2
+    mapped = jax.tree_util.tree_map(lambda x: x * 2, s)
+    assert isinstance(mapped, IndexedSlices)
+    assert mapped.dense_shape == (5, 4)
+    out = jax.jit(lambda t: t.to_dense())(s)
+    assert out.shape == (5, 4)

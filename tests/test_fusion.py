@@ -1,0 +1,62 @@
+"""Fusion-buffer (Horovod HOROVOD_FUSION_THRESHOLD) property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fusion
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@st.composite
+def grad_trees(draw):
+    n = draw(st.integers(1, 10))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    shapes = [tuple(rng.integers(1, 9, size=rng.integers(1, 4)))
+              for _ in range(n)]
+    return {f"p{i}": jnp.asarray(rng.standard_normal(s).astype(np.float32))
+            for i, s in enumerate(shapes)}
+
+
+@given(grad_trees(), st.integers(16, 4096))
+@settings(max_examples=60, deadline=None)
+def test_pack_unpack_roundtrip(tree, threshold):
+    plan = fusion.plan_fusion(tree, threshold_bytes=threshold)
+    buffers = fusion.pack(tree, plan)
+    out = fusion.unpack(buffers, plan, like=tree)
+    for k in tree:
+        np.testing.assert_array_equal(out[k], tree[k])
+
+
+@given(grad_trees(), st.integers(64, 4096))
+@settings(max_examples=40, deadline=None)
+def test_buckets_respect_threshold(tree, threshold):
+    plan = fusion.plan_fusion(tree, threshold_bytes=threshold)
+    leaves = jax.tree_util.tree_leaves(tree)
+    for bucket in plan.buckets:
+        total = sum(leaves[s.leaf_idx].size * 4 for s in bucket)
+        # single over-threshold tensors get their own bucket
+        if len(bucket) > 1:
+            assert total <= threshold
+    # every leaf appears exactly once
+    seen = sorted(s.leaf_idx for b in plan.buckets for s in b)
+    assert seen == list(range(len(leaves)))
+
+
+@given(grad_trees())
+@settings(max_examples=30, deadline=None)
+def test_fused_all_reduce_local_identity(tree):
+    """With axis_name=None the fused allreduce must be an exact no-op."""
+    out = fusion.fused_all_reduce(tree, axis_name=None,
+                                  threshold_bytes=256)
+    for k in tree:
+        np.testing.assert_allclose(out[k], tree[k], rtol=1e-6)
+
+
+def test_fusion_reduces_collective_launches():
+    tree = {f"p{i}": jnp.ones((4, 4)) for i in range(64)}
+    n_unfused = len(jax.tree_util.tree_leaves(tree))
+    n_fused = fusion.collective_launches(tree, threshold_bytes=1 << 20)
+    assert n_fused == 1 < n_unfused

@@ -1,0 +1,115 @@
+"""Microbatch accumulation + dynamic loss scaling tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import DistributedOptimizer, densify
+from repro.data import make_pipeline
+from repro.models import build_model
+from repro.optim import adamw
+from repro.training.gradients import grad_contributions
+from repro.training.microbatch import (LossScaler, accumulate_microbatches,
+                                       make_scaled_train_step,
+                                       split_microbatches)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("llama3.2-1b").reduced()
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    pipe = make_pipeline(cfg, batch_per_host=8, seq_len=16)
+    batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(0).items()}
+    return cfg, m, params, batch
+
+
+@pytest.mark.parametrize("n", [1, 2, 4, 8])
+def test_microbatch_grads_equal_full_batch(setup, n):
+    cfg, m, params, batch = setup
+    g_full, l_full, _ = grad_contributions(m, params, batch)
+    if n == 1:
+        return
+    stacked = split_microbatches(batch, n)
+    g_mb, l_mb, _ = accumulate_microbatches(m, params, stacked)
+    for a, b in zip(jax.tree_util.tree_leaves(g_full),
+                    jax.tree_util.tree_leaves(g_mb)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=5e-5, atol=5e-6)
+    np.testing.assert_allclose(float(l_full), float(l_mb), rtol=1e-5)
+
+
+def test_microbatch_sparse_contributions(setup):
+    """Sparse path: concatenated per-microbatch IndexedSlices must
+    densify to the full-batch embedding gradient."""
+    cfg, m, params, batch = setup
+    g_full, _, _ = grad_contributions(m, params, batch)
+    stacked = split_microbatches(batch, 4)
+    g_s, _, _ = accumulate_microbatches(m, params, stacked,
+                                        sparse_embedding=True)
+    emb = sum(densify(c) for c in g_s["embedding"])
+    np.testing.assert_allclose(np.asarray(emb),
+                               np.asarray(g_full["embedding"]),
+                               rtol=5e-5, atol=5e-6)
+
+
+def test_loss_scaler_growth_and_backoff():
+    s = LossScaler(init_scale=8.0, growth_factor=2.0, backoff_factor=0.5,
+                   growth_interval=2)
+    state = s.init()
+    good = {"g": jnp.ones((3,))}
+    bad = {"g": jnp.array([1.0, jnp.inf, 0.0])}
+    # two good steps -> growth
+    _, f1, state = s.unscale_and_check(good, state)
+    assert bool(f1) and float(state.scale) == 8.0
+    _, f2, state = s.unscale_and_check(good, state)
+    assert float(state.scale) == 16.0
+    # overflow -> backoff, counter reset
+    _, f3, state = s.unscale_and_check(bad, state)
+    assert not bool(f3) and float(state.scale) == 8.0
+    assert int(state.good_steps) == 0
+
+
+def test_scaled_step_skips_on_overflow(setup):
+    cfg, m, params, batch = setup
+    opt = DistributedOptimizer(adamw(1e-3), sparse_as_dense=True)
+    scaler = LossScaler(init_scale=2.0 ** 10)
+    step = jax.jit(make_scaled_train_step(m, opt, scaler))
+    st, ss = opt.init(params), scaler.init()
+    p2, st2, ss2, met = step(params, st, ss, batch)
+    assert not bool(met["overflow"])
+    changed = any(float(jnp.max(jnp.abs(a - b))) > 0 for a, b in zip(
+        jax.tree_util.tree_leaves(p2), jax.tree_util.tree_leaves(params)))
+    assert changed
+    # poison the batch -> overflow path must skip the update
+    bad = dict(batch)
+    bad_params = jax.tree_util.tree_map(
+        lambda x: jnp.where(jnp.isfinite(x), x, x), params)
+    bad_params = dict(params)
+    bad_params["embedding"] = params["embedding"].at[0, 0].set(jnp.nan)
+    p3, st3, ss3, met3 = step(bad_params, st, ss, batch)
+    assert bool(met3["overflow"])
+    for a, b in zip(jax.tree_util.tree_leaves(p3),
+                    jax.tree_util.tree_leaves(bad_params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert float(ss3.scale) < float(ss.scale) * 1.01  # backed off (or =)
+
+
+def test_scaled_microbatch_training_learns(setup):
+    cfg, m, params, batch = setup
+    opt = DistributedOptimizer(adamw(5e-3), sparse_as_dense=True)
+    scaler = LossScaler()
+    step = jax.jit(make_scaled_train_step(m, opt, scaler,
+                                          n_microbatches=2))
+    st, ss = opt.init(params), scaler.init()
+    pipe = make_pipeline(cfg, batch_per_host=8, seq_len=16)
+    first = None
+    for i in range(12):
+        b = {k: jnp.asarray(v) for k, v in pipe.batch_at(i).items()}
+        params, st, ss, met = step(params, st, ss, b)
+        if first is None:
+            first = float(met["loss"])
+    assert float(met["loss"]) < first
