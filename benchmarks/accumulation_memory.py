@@ -20,10 +20,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import (DistributedOptimizer, IndexedSlices,
-                        accumulate_gradients, accumulated_nbytes)
-from repro.core.comm import gathered_buffer_bytes, dense_buffer_bytes
-from repro.optim import adamw
+from repro.core import (ExchangeConfig, IndexedSlices, accumulate_gradients,
+                        accumulated_nbytes, compile_plan)
 
 TOKENS_PER_WORKER = 5000           # paper: batch 5000 tokens/process
 PAPER_SPARSE_GB = 11.4
@@ -50,21 +48,31 @@ def paper_contributions(scale: float = 1.0):
 
 def run(emit):
     grads, (v, d, n) = paper_contributions(1.0)
+    tree = {"embedding": grads}
 
-    # Algorithm 1 (TF default): gather representation
-    acc_sparse = accumulate_gradients(grads, algorithm="tf_algorithm1")
-    rows = int(acc_sparse.indices.shape[0])
+    # Algorithm 1 (TF default): the plan classifies the leaf to a gather
+    # bucket; its buffer accounting is the paper's Fig. 3a curve
+    plan_sparse = compile_plan(tree,
+                               ExchangeConfig(algorithm="tf_algorithm1"))
+    spec = plan_sparse.leaf_specs[0]
+    rows = spec.rows
     assert rows == 2 * n + v, rows
-    per_worker = accumulated_nbytes(acc_sparse)
+    # cross-check the static plan against the ACTUAL accumulation path
+    acc_sparse = accumulate_gradients(grads, algorithm="tf_algorithm1")
+    assert int(acc_sparse.indices.shape[0]) == rows
+    assert plan_sparse.buffer_bytes(1) == accumulated_nbytes(acc_sparse)
     for p in (8, 16, 32, 64):
-        total = gathered_buffer_bytes(rows, d, jnp.float32, p)
-        emit(f"fig3_sparse_buffer_P{p}", 0.0, f"{total/1e9:.2f}GB")
-    sparse64 = gathered_buffer_bytes(rows, d, jnp.float32, 64)
+        emit(f"fig3_sparse_buffer_P{p}", 0.0,
+             f"{plan_sparse.buffer_bytes(p)/1e9:.2f}GB")
+    sparse64 = plan_sparse.buffer_bytes(64)
 
     # sparse_as_dense (the fix): constant dense buffer
+    plan_dense = compile_plan(tree, ExchangeConfig(sparse_as_dense=True))
     acc_dense = accumulate_gradients(grads, algorithm="tf_algorithm1",
                                      sparse_as_dense=True)
-    dense_b = accumulated_nbytes(acc_dense)
+    dense_b = plan_dense.buffer_bytes(64)
+    assert dense_b == plan_dense.buffer_bytes(8)       # P-independent
+    assert dense_b == accumulated_nbytes(acc_dense)
     emit("fig3_dense_buffer_anyP", 0.0, f"{dense_b/1e6:.1f}MB")
 
     ratio = sparse64 / dense_b

@@ -26,11 +26,12 @@ from repro.kernels import ops as kops
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 _DIST_CODE = textwrap.dedent("""
-    import time
+    import functools, time
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import Mesh, PartitionSpec as P
     from jax.experimental.shard_map import shard_map
-    from repro.core import IndexedSlices, DistributedOptimizer, comm, accumulation
+    from repro.core import IndexedSlices, DistributedOptimizer
+    from repro.optim import adamw
 
     V, D, N = 33708, 1024, 5000          # the paper's exact tensor shapes
     P_ = len(jax.devices())
@@ -40,24 +41,28 @@ _DIST_CODE = textwrap.dedent("""
     vals = jnp.asarray(rng.standard_normal((P_, N, D)), dtype=jnp.float32)
     dense = jnp.asarray(rng.standard_normal((P_, V, D)), dtype=jnp.float32)
 
-    def gather_step(i, v, d):
-        # Alg.1: downgrade dense -> slices, concat, ALLGATHER, apply
-        s = IndexedSlices(i[0], v[0], (V, D))
-        acc = accumulation.accumulate_gradients([s, d[0]],
-                                                algorithm='tf_algorithm1')
-        g = comm.all_gather_slices(acc, 'data')
-        return accumulation.densify(g)[None] / P_
+    # each strategy is the SAME planned exchange, different schedule:
+    # gather   -> Alg.1 gather bucket (allgather, the pathology)
+    # reduce   -> sparse_as_dense dense bucket (allreduce, the fix)
+    # rs_bf16  -> beyond-paper: reduce-scatter + allgather on a bf16 wire
+    STRATEGIES = {
+        'gather': dict(sparse_as_dense=False),
+        'reduce': dict(sparse_as_dense=True),
+        'rs_bf16': dict(sparse_as_dense=True, reduce_scatter=True,
+                        wire_dtype='bfloat16'),
+    }
 
-    def reduce_step(i, v, d):
-        # sparse_as_dense: densify locally, ALLREDUCE
-        s = IndexedSlices(i[0], v[0], (V, D))
-        acc = accumulation.accumulate_gradients(
-            [s, d[0]], algorithm='tf_algorithm1', sparse_as_dense=True)
-        return comm.all_reduce_dense(acc, 'data')[None]
+    def step(i, v, d, opt):
+        g = {'emb': [IndexedSlices(i[0], v[0], (V, D)), d[0]]}
+        return opt.exchange(g)['emb'][None]
 
-    out = {}
-    for name, fn in [('gather', gather_step), ('reduce', reduce_step)]:
-        sm = jax.jit(shard_map(fn, mesh=mesh,
+    out, wire = {}, {}
+    for name, kw in STRATEGIES.items():
+        opt = DistributedOptimizer(adamw(1e-3), axis_name=('data',), **kw)
+        g0 = {'emb': [IndexedSlices(idx[0], vals[0], (V, D)), dense[0]]}
+        wire[name] = opt.exchange_stats(g0, n_workers=P_).wire_bytes
+        sm = jax.jit(shard_map(functools.partial(step, opt=opt),
+                               mesh=mesh,
                                in_specs=(P('data'), P('data'), P('data')),
                                out_specs=P('data'), check_rep=False))
         r = sm(idx, vals, dense); jax.block_until_ready(r)
@@ -67,9 +72,12 @@ _DIST_CODE = textwrap.dedent("""
             jax.block_until_ready(sm(idx, vals, dense))
             ts.append(time.perf_counter() - t0)
         out[name] = sorted(ts)[1]
-    a, b = np.asarray(sm(idx, vals, dense)), None
     print('GATHER_US', out['gather'] * 1e6)
     print('REDUCE_US', out['reduce'] * 1e6)
+    print('RSBF16_US', out['rs_bf16'] * 1e6)
+    print('WIRE_GATHER', wire['gather'])
+    print('WIRE_REDUCE', wire['reduce'])
+    print('WIRE_RSBF16', wire['rs_bf16'])
 """)
 
 
@@ -83,12 +91,18 @@ def run(emit):
         emit("fig5_time_dist_error", 0.0, res.stderr[-120:].replace(
             ",", ";").replace("\n", "|"))
     else:
-        g = float(res.stdout.split("GATHER_US")[1].split()[0])
-        r = float(res.stdout.split("REDUCE_US")[1].split()[0])
+        def grab(tag):
+            return float(res.stdout.split(tag)[1].split()[0])
+        g, r, rs = grab("GATHER_US"), grab("REDUCE_US"), grab("RSBF16_US")
         emit("fig5_time_gather_P8_paper_shapes", g, "allgather+apply")
         emit("fig5_time_reduce_P8_paper_shapes", r, "densify+allreduce")
+        emit("fig5_time_rs_bf16_P8", rs, "reduce_scatter+allgather_bf16wire")
         emit("fig5_time_ratio_P8", 0.0,
              f"{g/r:.1f}x_paper_25x_at_P64_on_OmniPath")
+        emit("fig5_planned_wire_P8", 0.0,
+             f"gather{grab('WIRE_GATHER')/1e6:.0f}MB_"
+             f"reduce{grab('WIRE_REDUCE')/1e6:.0f}MB_"
+             f"rs_bf16{grab('WIRE_RSBF16')/1e6:.0f}MB")
 
     # densify kernel: Pallas (interpret) vs XLA scatter oracle
     rng = np.random.default_rng(0)

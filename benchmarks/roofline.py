@@ -13,6 +13,7 @@ import os
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SWEEP = os.path.join(REPO, "experiments", "dryrun")
+EXCHANGE_AUDIT = os.path.join(REPO, "experiments", "exchange_audit.json")
 
 
 def load_all():
@@ -25,6 +26,17 @@ def load_all():
 
 
 def run(emit):
+    # ExchangePlan-vs-HLO collective audit (single source of truth check;
+    # produced by `python -m repro.launch.dryrun --audit-exchange
+    # --arch transformer-big --out experiments/exchange_audit.json`)
+    if os.path.exists(EXCHANGE_AUDIT):
+        a = json.load(open(EXCHANGE_AUDIT))
+        emit("exchange_plan_vs_hlo", 0.0,
+             f"{'PASS' if a.get('counts_match') else 'FAIL'}_"
+             f"coll{a.get('planned_n_collectives')}_"
+             f"planned{a.get('planned_wire_bytes', 0)/1e6:.1f}MB_"
+             f"hlo{a.get('hlo_wire_bytes', 0)/1e6:.1f}MB")
+
     rows = load_all()
     if not rows:
         emit("roofline_missing", 0.0, "run_scripts/run_dryruns.sh_first")

@@ -26,21 +26,23 @@ from __future__ import annotations
 import dataclasses
 import math
 
+import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.core.comm import allreduce_wire_bytes, allgather_wire_bytes
-from repro.launch.dryrun import param_counts
+from repro.core import ExchangeConfig, IndexedSlices, compile_plan
+from repro.core.fusion import DEFAULT_FUSION_THRESHOLD
+from repro.launch import specs as specs_lib
 
 BW = 12.5e9            # Omni-Path 100 Gb/s
 TOKENS_PER_WORKER = 5000
-N_COLL_FUSED = 7       # ~870MB of grads / 128MB fusion buffers
 
 
 @dataclasses.dataclass(frozen=True)
 class PaperModel:
     g_bytes: float          # total dense gradient bytes
     s_bytes: float          # per-worker slice bytes (Alg.1 gather input)
+    n_coll_fused: int       # fused collective launches (from the plan)
     t_compute: float
     alpha: float            # per-collective latency (s)
     beta: float             # sparse apply cost (s per byte * P)
@@ -49,7 +51,7 @@ class PaperModel:
         if p <= 1:
             return self.t_compute
         wire = 2 * (p - 1) / p * self.g_bytes / BW
-        lat = self.alpha * N_COLL_FUSED * math.log2(p)
+        lat = self.alpha * self.n_coll_fused * math.log2(p)
         return self.t_compute + wire + lat
 
     def t_sparse(self, p: int) -> float:
@@ -57,7 +59,7 @@ class PaperModel:
             return self.t_compute
         wire = (p - 1) * self.s_bytes / BW
         apply = self.beta * p * self.s_bytes
-        lat = self.alpha * N_COLL_FUSED * math.log2(p)
+        lat = self.alpha * self.n_coll_fused * math.log2(p)
         return self.t_compute + wire + apply + lat
 
     def weak_efficiency(self, p: int, sparse: bool) -> float:
@@ -68,17 +70,46 @@ class PaperModel:
     def t_strong(self, p: int, global_tokens: int) -> float:
         frac = (global_tokens / p) / TOKENS_PER_WORKER
         wire = 2 * (p - 1) / p * self.g_bytes / BW if p > 1 else 0.0
-        lat = self.alpha * N_COLL_FUSED * math.log2(p) if p > 1 else 0.0
+        lat = self.alpha * self.n_coll_fused * math.log2(p) if p > 1 \
+            else 0.0
         return self.t_compute * frac + wire + lat
+
+
+def paper_grad_tree(cfg):
+    """The full transformer-big gradient-contribution tree: the real
+    parameter structure (f32 gradients), with the shared embedding
+    receiving the paper's mixed contribution list (enc tokens + dec
+    tokens sparse, tied projection dense)."""
+    params = jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32),
+        specs_lib.params_structs(cfg))
+    v, d = params["embedding"].shape
+    n = TOKENS_PER_WORKER
+
+    def tok_slices():
+        return IndexedSlices(
+            indices=jax.ShapeDtypeStruct((n,), jnp.int32),
+            values=jax.ShapeDtypeStruct((n, d), jnp.float32),
+            dense_shape=(v, d))
+    tree = dict(params)
+    tree["embedding"] = [tok_slices(), tok_slices(), params["embedding"]]
+    return tree
 
 
 def calibrate() -> PaperModel:
     cfg = get_config("transformer-big")
-    n_params, _ = param_counts(cfg)
-    g_bytes = n_params * 4.0
+    tree = paper_grad_tree(cfg)
+    # both strategies' byte/launch terms come from the SAME ExchangePlans
+    # the runtime would execute (single source of truth with core/comm)
+    dense_plan = compile_plan(tree, ExchangeConfig(
+        sparse_as_dense=True,
+        fusion_threshold=DEFAULT_FUSION_THRESHOLD))  # Listing 2: 128 MiB
+    sparse_plan = compile_plan(tree, ExchangeConfig(
+        algorithm="tf_algorithm1"))
+    g_bytes = float(dense_plan.dense_bytes)
     # Alg.1 slices/worker: enc + dec tokens + downgraded dense head
-    rows = 2 * TOKENS_PER_WORKER + cfg.vocab
-    s_bytes = rows * (cfg.d_model * 4 + 4)
+    s_bytes = float(sparse_plan.sparse_bytes_per_worker)
+    n_coll = dense_plan.n_collectives
 
     # anchor 1 (dense 95% @ P=32), alpha initially 0:
     #   0.95 = T_c / (T_c + wire32)  =>  T_c = wire32 * 0.95/0.05
@@ -87,10 +118,10 @@ def calibrate() -> PaperModel:
     # anchor 2 (dense 91.5% @ P=1200) fixes alpha:
     wire1200 = 2 * 1199 / 1200 * g_bytes / BW
     slack = t_compute / 0.915 - t_compute - wire1200
-    alpha = max(slack / (N_COLL_FUSED * math.log2(1200)), 0.0)
+    alpha = max(slack / (n_coll * math.log2(1200)), 0.0)
     # anchor 3 (sparse 75% @ P=32) fixes beta:
-    m0 = PaperModel(g_bytes, s_bytes, t_compute, alpha, 0.0)
+    m0 = PaperModel(g_bytes, s_bytes, n_coll, t_compute, alpha, 0.0)
     t_target = t_compute / 0.75
     gap = t_target - m0.t_sparse(32)
     beta = max(gap / (32 * s_bytes), 0.0)
-    return PaperModel(g_bytes, s_bytes, t_compute, alpha, beta)
+    return PaperModel(g_bytes, s_bytes, n_coll, t_compute, alpha, beta)

@@ -1,12 +1,19 @@
 """Reproduce the paper's core experiment at laptop scale: per-worker-count
-comparison of the two accumulation strategies (buffer size, measured
-step time, model equality).
+comparison of the accumulation/exchange strategies (buffer size, planned
+wire bytes, measured step time, model equality).
+
+All static numbers come from the ExchangePlan — the same schedule the
+runtime collectives execute.  Beyond the paper's two strategies, the
+planner's reduce-scatter and bf16-wire paths can be compared with
+``--reduce-scatter`` / ``--wire-dtype bf16`` (adds a third row).
 
 Run under emulated workers (pick any N):
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
-    PYTHONPATH=src python examples/scaling_comparison.py
+    PYTHONPATH=src python examples/scaling_comparison.py \\
+        [--reduce-scatter] [--wire-dtype bf16]
 """
+import argparse
 import time
 
 import jax
@@ -24,7 +31,17 @@ from repro.training import make_train_step
 from repro.training.gradients import grad_contributions
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--reduce-scatter", action="store_true",
+                    help="add a dense_reduce row exchanged via "
+                         "reduce-scatter + allgather")
+    ap.add_argument("--wire-dtype", default=None,
+                    choices=[None, "bf16", "bfloat16"],
+                    help="wire dtype for the extra row (downcast on "
+                         "pack, upcast on unpack)")
+    args = ap.parse_args(argv)
+
     n_dev = len(jax.devices())
     cfg = get_config("transformer-big").reduced()
     model = build_model(cfg)
@@ -37,16 +54,26 @@ def main():
         model, params, {k: v[:2] for k, v in batch.items()},
         sparse_embedding=True)
 
+    strategies = [("sparse_gather", dict(sparse_as_dense=False)),
+                  ("dense_reduce", dict(sparse_as_dense=True))]
+    if args.reduce_scatter or args.wire_dtype:
+        extra = dict(sparse_as_dense=True,
+                     reduce_scatter=args.reduce_scatter,
+                     wire_dtype=args.wire_dtype)
+        name = "dense" + ("_rs" if args.reduce_scatter else "") + \
+            (f"_{args.wire_dtype}" if args.wire_dtype else "")
+        strategies.append((name, extra))
+
     print(f"{n_dev} emulated workers — {cfg.name}  "
           f"(run with XLA_FLAGS=--xla_force_host_platform_device_count=N "
           f"to change)")
     print(f"{'strategy':15s} {'buffer@N':>12s} {'wire/worker':>12s} "
-          f"{'ms/step':>9s} {'final loss':>10s}")
+          f"{'n_coll':>7s} {'ms/step':>9s} {'final loss':>10s}")
 
     final_params = {}
-    for name, sad in [("sparse_gather", False), ("dense_reduce", True)]:
-        opt = DistributedOptimizer(adamw(3e-3), sparse_as_dense=sad,
-                                   axis_name=("data",))
+    for name, kwargs in strategies:
+        opt = DistributedOptimizer(adamw(3e-3), axis_name=("data",),
+                                   **kwargs)
         stats = opt.exchange_stats(grads, n_workers=n_dev)
         step = shard_map(
             make_train_step(model, opt, sparse_embedding=True),
@@ -64,14 +91,23 @@ def main():
         dt = (time.perf_counter() - t0) / 5
         final_params[name] = p
         print(f"{name:15s} {stats.accumulated_bytes/1e6:10.1f}MB "
-              f"{stats.wire_bytes/1e6:10.1f}MB {dt*1e3:9.1f} "
-              f"{float(m['loss']):10.4f}")
+              f"{stats.wire_bytes/1e6:10.1f}MB {stats.n_collectives:7d} "
+              f"{dt*1e3:9.1f} {float(m['loss']):10.4f}")
 
     diff = max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(
         jax.tree_util.tree_leaves(final_params["sparse_gather"]),
         jax.tree_util.tree_leaves(final_params["dense_reduce"])))
     print(f"\nmax param difference: {diff:.2e} — same model, "
           f"{'(paper Fig. 12 invariance holds)' if diff < 1e-4 else 'BUG'}")
+    extras = [n for n in final_params
+              if n not in ("sparse_gather", "dense_reduce")]
+    for name in extras:
+        d = max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(
+            jax.tree_util.tree_leaves(final_params[name]),
+            jax.tree_util.tree_leaves(final_params["dense_reduce"])))
+        tol = 5e-2 if "bf" in name else 1e-4
+        print(f"{name} vs dense_reduce: {d:.2e} "
+              f"({'within wire tolerance' if d < tol else 'BUG'})")
 
 
 if __name__ == "__main__":

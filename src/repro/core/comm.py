@@ -40,10 +40,15 @@ def _axes(axis_name: AxisNames) -> Tuple[str, ...]:
 
 def axis_size(axis_name: AxisNames) -> int:
     axes = _axes(axis_name)
-    n = 1
-    for a in axes:
-        n *= jax.lax.axis_size(a)
-    return n
+    if not axes:
+        return 1
+    if hasattr(jax.lax, "axis_size"):           # jax >= 0.4.38
+        n = 1
+        for a in axes:
+            n *= jax.lax.axis_size(a)
+        return n
+    # portable fallback: psum of a unit constant-folds to the axis size
+    return jax.lax.psum(1, axes)
 
 
 # ---------------------------------------------------------------------------
@@ -72,8 +77,36 @@ def reduce_scatter_dense(x: jax.Array, axis_name: str,
     """
     out = jax.lax.psum_scatter(x, axis_name, scatter_dimension=0, tiled=True)
     if average:
-        out = out / jax.lax.axis_size(axis_name)
+        out = out / axis_size(axis_name)
     return out
+
+
+def all_gather_dense(x: jax.Array, axis_name: AxisNames) -> jax.Array:
+    """Tiled allgather of a dense tensor over dim 0 (the second half of
+    the reduce-scatter + allgather decomposition of allreduce)."""
+    axes = _axes(axis_name)
+    for a in reversed(axes):
+        x = jax.lax.all_gather(x, a, axis=0, tiled=True)
+    return x
+
+
+def two_level_all_reduce(x: jax.Array, axis_name: AxisNames,
+                         average: bool = True) -> jax.Array:
+    """Hierarchical allreduce: one psum PER mesh axis, innermost first.
+
+    Over ``("pod", "data")`` this lowers to a within-pod reduction
+    followed by a cross-pod reduction — two smaller collectives on
+    bandwidth-matched rings instead of one flat ring spanning the slow
+    inter-pod links.
+    """
+    axes = _axes(axis_name)
+    if not axes:
+        return x
+    for a in reversed(axes):
+        x = jax.lax.psum(x, a)
+    if average:
+        x = x / axis_size(axes)
+    return x
 
 
 # ---------------------------------------------------------------------------
@@ -131,6 +164,28 @@ def allgather_wire_bytes(rows: int, row_elems: int, dtype, n_workers: int,
     per_worker = rows * (row_elems * dtype_bytes(dtype)
                          + dtype_bytes(index_dtype))
     return int((n_workers - 1) * per_worker)
+
+
+def reduce_scatter_wire_bytes(n_elems: int, dtype, n_workers: int) -> int:
+    """Bytes moved per worker by a tiled reduce-scatter of an
+    ``n_elems``-element buffer (padded to a multiple of P)."""
+    if n_workers <= 1:
+        return 0
+    padded = -(-n_elems // n_workers) * n_workers
+    return int((n_workers - 1) / n_workers * padded * dtype_bytes(dtype))
+
+
+def allgather_dense_wire_bytes(n_elems: int, dtype, n_workers: int) -> int:
+    """Bytes moved per worker by a tiled allgather re-assembling an
+    ``n_elems``-element buffer from its ``1/P`` shards."""
+    return reduce_scatter_wire_bytes(n_elems, dtype, n_workers)
+
+
+def hierarchical_allreduce_wire_bytes(shape: Sequence[int], dtype,
+                                      level_sizes: Sequence[int]) -> int:
+    """Bytes moved per worker by a two-level (per-mesh-axis) allreduce:
+    one ring allreduce of the FULL buffer per level."""
+    return sum(allreduce_wire_bytes(shape, dtype, p) for p in level_sizes)
 
 
 def gathered_buffer_bytes(rows: int, row_elems: int, dtype, n_workers: int,

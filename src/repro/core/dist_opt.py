@@ -1,15 +1,19 @@
 """DistributedOptimizer — the paper's Horovod API, in JAX.
 
-Wraps any ``repro.optim.Optimizer``.  Per variable, the wrapper:
+Wraps any ``repro.optim.Optimizer``.  Both the runtime exchange and the
+static byte accounting are thin consumers of ONE statically-compiled
+``ExchangePlan`` (``repro.core.exchange``), which per gradient-tree
+structure:
 
-  1. accumulates the (possibly multiple, possibly sparse) local gradient
-     contributions with the configured accumulation algorithm
-     (``repro.core.accumulation`` — paper Alg. 1 or Alg. 2, with the
+  1. classifies every variable's contribution list through the
+     configured accumulation algorithm (paper Alg. 1 / Alg. 2, with the
      ``sparse_as_dense`` Listing-1 pre-pass as the paper's shipped fix);
-  2. exchanges the accumulated gradient across the data-parallel mesh axes
-     — ``all_gather`` for IndexedSlices (pathological), ``psum`` for dense
-     (the fix), optionally through fusion buffers;
-  3. densifies whatever is left and applies the wrapped optimizer update.
+  2. buckets dense leaves into Horovod-style fusion buffers and sparse
+     IndexedSlices leaves into gather buckets;
+  3. schedules one collective per bucket — allgather for IndexedSlices
+     (pathological), fused allreduce for dense (the fix), optionally the
+     reduce-scatter+allgather decomposition or a hierarchical two-level
+     psum — with an optional bf16 ``wire_dtype``.
 
 The Horovod call
 
@@ -23,27 +27,19 @@ becomes
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Mapping, Optional, Sequence, Union
+from typing import Optional, Union
 
-import jax
-import jax.numpy as jnp
-
-from repro.core import accumulation, comm, fusion
-from repro.core.indexed_slices import IndexedSlices
+from repro.core import comm, exchange
 from repro.optim.base import Optimizer
-
-# A "grad tree" here is a pytree whose leaves are either dense arrays,
-# IndexedSlices, or *lists of contributions* (for variables with multiple
-# uses, e.g. tied embedding/projection weights).
-
-
-def _is_leaf(x) -> bool:
-    return isinstance(x, (IndexedSlices, list)) or hasattr(x, "shape")
 
 
 @dataclasses.dataclass(frozen=True)
 class ExchangeStats:
-    """Static per-step accounting, for benchmarks and EXPERIMENTS.md."""
+    """Static per-step accounting, for benchmarks and EXPERIMENTS.md.
+
+    Derived entirely from the ExchangePlan — the same numbers the
+    runtime collectives move.
+    """
     accumulated_bytes: int       # size of accumulated representation
     wire_bytes: int              # bytes moved by the collective (per worker)
     n_collectives: int
@@ -61,7 +57,9 @@ class DistributedOptimizer:
     average: bool = True
     fusion_threshold: Optional[int] = None  # bytes; None disables fusion
     use_kernel: bool = False                # Pallas densify kernel
-    reduce_scatter: bool = False            # beyond-paper ZeRO-style path
+    reduce_scatter: bool = False            # ZeRO-style RS+AG collective
+    wire_dtype: Optional[str] = None        # e.g. "bfloat16" wire compression
+    hierarchical: bool = False              # two-level psum per mesh axis
 
     # -- optimizer API -------------------------------------------------------
     def init(self, params):
@@ -71,81 +69,48 @@ class DistributedOptimizer:
         dense = self.exchange(grads)
         return self.base.update(dense, state, params)
 
-    # -- the paper's mechanism ----------------------------------------------
+    # -- the plan ------------------------------------------------------------
+    @property
+    def exchange_config(self) -> exchange.ExchangeConfig:
+        return exchange.ExchangeConfig(
+            algorithm=self.algorithm,
+            sparse_as_dense=self.sparse_as_dense,
+            fusion_threshold=self.fusion_threshold,
+            reduce_scatter=self.reduce_scatter,
+            hierarchical=self.hierarchical,
+            wire_dtype=self.wire_dtype,
+            use_kernel=self.use_kernel)
+
+    def plan(self, grads) -> exchange.ExchangePlan:
+        """The (cached) static schedule for this gradient tree."""
+        return exchange.compile_plan(grads, self.exchange_config)
+
+    # -- the paper's mechanism, now plan-driven ------------------------------
     def accumulate(self, grads):
-        """Step 1: per-variable local accumulation (Alg. 1 / Alg. 2)."""
-        def acc(g):
-            contribs = g if isinstance(g, list) else [g]
-            return accumulation.accumulate_gradients(
-                contribs, algorithm=self.algorithm,
-                sparse_as_dense=self.sparse_as_dense,
-                use_kernel=self.use_kernel)
-        return jax.tree_util.tree_map(acc, grads, is_leaf=_is_leaf)
+        """Step 1: per-variable local accumulation (Alg. 1 / Alg. 2),
+        eagerly materialised (the planned exchange itself defers
+        densification into packing)."""
+        return self.plan(grads).accumulate_tree(grads)
 
     def exchange(self, grads):
         """Steps 1-3: accumulate, cross-worker exchange, densify."""
-        accumulated = self.accumulate(grads)
-        leaves, treedef = jax.tree_util.tree_flatten(
-            accumulated, is_leaf=_is_leaf)
-
-        sparse_idx = [i for i, g in enumerate(leaves)
-                      if isinstance(g, IndexedSlices)]
-        dense_idx = [i for i, g in enumerate(leaves)
-                     if not isinstance(g, IndexedSlices)]
-
-        out: List[Any] = list(leaves)
-        # Sparse leaves: Horovod allgather, then densify to apply.
-        for i in sparse_idx:
-            gathered = comm.all_gather_slices(leaves[i], self.axis_name)
-            dense = accumulation.densify(gathered, use_kernel=self.use_kernel)
-            if self.average and self.axis_name is not None:
-                dense = dense / comm.axis_size(self.axis_name)
-            out[i] = dense
-        # Dense leaves: Horovod allreduce (optionally fused / reduce-scatter).
-        if dense_idx:
-            dense_leaves = [leaves[i] for i in dense_idx]
-            if self.fusion_threshold is not None:
-                reduced = fusion.fused_all_reduce(
-                    dense_leaves, self.axis_name,
-                    threshold_bytes=self.fusion_threshold,
-                    average=self.average)
-            else:
-                reduced = [comm.all_reduce_dense(g, self.axis_name,
-                                                 average=self.average)
-                           for g in dense_leaves]
-            for i, g in zip(dense_idx, reduced):
-                out[i] = g
-        return jax.tree_util.tree_unflatten(treedef, out)
+        return self.plan(grads).execute(grads, self.axis_name,
+                                        average=self.average)
 
     # -- static accounting (no devices needed) -------------------------------
-    def exchange_stats(self, grads, n_workers: int) -> ExchangeStats:
-        accumulated = self.accumulate(grads)
-        leaves = jax.tree_util.tree_flatten(accumulated, is_leaf=_is_leaf)[0]
-        acc_bytes = 0
-        wire = 0
-        n_coll = 0
-        dense_leaves = []
-        for g in leaves:
-            if isinstance(g, IndexedSlices):
-                rows = int(g.indices.shape[0])
-                row_elems = int(g.values.size // max(rows, 1))
-                acc_bytes += comm.gathered_buffer_bytes(
-                    rows, row_elems, g.values.dtype, n_workers)
-                wire += comm.allgather_wire_bytes(
-                    rows, row_elems, g.values.dtype, n_workers)
-                n_coll += 1
-            else:
-                acc_bytes += comm.dense_buffer_bytes(g.shape, g.dtype)
-                dense_leaves.append(g)
-        if dense_leaves:
-            if self.fusion_threshold is not None:
-                n_coll += fusion.collective_launches(
-                    dense_leaves, self.fusion_threshold)
-            else:
-                n_coll += len(dense_leaves)
-            for g in dense_leaves:
-                wire += comm.allreduce_wire_bytes(g.shape, g.dtype, n_workers)
+    def exchange_stats(self, grads,
+                       n_workers: Union[int, tuple]) -> ExchangeStats:
+        plan = self.plan(grads)
         strategy = ("dense_reduce" if self.sparse_as_dense
                     else f"{self.algorithm}")
-        return ExchangeStats(accumulated_bytes=acc_bytes, wire_bytes=wire,
-                             n_collectives=n_coll, strategy=strategy)
+        if self.reduce_scatter:
+            strategy += "+reduce_scatter"
+        if self.hierarchical:
+            strategy += "+hierarchical"
+        if plan.config.wire_dtype is not None:
+            strategy += f"+wire:{plan.config.wire_dtype}"
+        return ExchangeStats(
+            accumulated_bytes=plan.buffer_bytes(n_workers),
+            wire_bytes=plan.wire_bytes(n_workers),
+            n_collectives=plan.n_collectives,
+            strategy=strategy)

@@ -1,0 +1,565 @@
+"""ExchangePlan — one static collective scheduler for accumulation,
+fusion, and cross-worker gradient exchange.
+
+The paper's result is that the accumulation REPRESENTATION (dense reduce
+vs. sparse gather) and the collective layout (Horovod's 128 MiB fusion
+buffers) decide whether training scales.  Previously that choice was
+re-derived eagerly, per leaf, in three places (``DistributedOptimizer.
+exchange``, ``exchange_stats``, and each benchmark's hand-rolled byte
+accounting).  Following Mesh-TensorFlow's lesson that communication
+layout should be an explicit statically-compiled plan, this module
+compiles the whole decision ONCE per gradient-tree structure:
+
+  1. **classify** every leaf's contribution list through the configured
+     accumulation algorithm (paper Alg. 1 / Alg. 2 / the sparse_as_dense
+     Listing-1 pre-pass) to its post-accumulation representation;
+  2. **bucket** dense leaves into Horovod-style fusion buffers
+     (first-fit-decreasing) and sparse IndexedSlices leaves into their
+     own gather buckets;
+  3. **select a collective** per bucket — fused allreduce,
+     reduce-scatter + allgather (ZeRO-style decomposition), allgather
+     (the pathological sparse path), or a hierarchical two-level psum
+     over ``("pod", "data")`` mesh axes;
+  4. optionally run the wire in a narrower ``wire_dtype`` (bf16):
+     downcast on pack, upcast on unpack (Ott et al. 2018), with
+     densification (XLA scatter-add or the Pallas kernel) FUSED into
+     packing so deferred-sparse leaves never materialise a dense f32
+     tensor before the cast.
+
+The plan is cached on (treedef, contribution shapes/dtypes, config) and
+is the single source of truth for ``wire_bytes`` / ``buffer_bytes`` /
+``n_collectives`` consumed by the optimizer, the launchers' collective
+audit, the benchmarks, and the roofline/scaling models.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import accumulation, comm, fusion
+from repro.core.indexed_slices import IndexedSlices, concat_slices
+
+# ---------------------------------------------------------------------------
+# Configuration
+# ---------------------------------------------------------------------------
+
+#: collective kinds a dense bucket can be scheduled onto
+ALLREDUCE = "allreduce"
+REDUCE_SCATTER = "reduce_scatter"       # psum_scatter + tiled allgather
+HIERARCHICAL = "hierarchical"           # one psum per mesh axis
+ALLGATHER = "allgather"                 # sparse gather buckets only
+
+#: HLO collectives emitted per bucket, per kind (the dry-run audit
+#: checks lowered HLO against exactly these counts); hierarchical
+#: buckets emit ``config.hierarchy_levels`` psums instead
+COLLECTIVES_PER_BUCKET = {ALLREDUCE: 1, REDUCE_SCATTER: 2, ALLGATHER: 1}
+
+
+def canonical_dtype(name) -> Optional[str]:
+    """Normalise a dtype spec ('bf16', jnp.bfloat16, ...) to its canonical
+    numpy name, or None."""
+    if name is None:
+        return None
+    aliases = {"bf16": "bfloat16", "f32": "float32", "fp32": "float32",
+               "f16": "float16", "fp16": "float16"}
+    if isinstance(name, str) and name in aliases:
+        name = aliases[name]
+    try:
+        return jnp.dtype(name).name
+    except TypeError as e:
+        raise ValueError(f"unknown wire_dtype {name!r} (try 'bf16', "
+                         f"'f16', or any numpy dtype name)") from e
+
+
+@dataclasses.dataclass(frozen=True)
+class ExchangeConfig:
+    """Everything the planner needs to know, all static."""
+    algorithm: str = "tf_algorithm1"     # paper Alg. 1 (TF upstream)
+    sparse_as_dense: bool = False        # Horovod Listing-1 pre-pass
+    fusion_threshold: Optional[int] = None   # bytes; None = bucket/leaf
+    reduce_scatter: bool = False         # RS+AG instead of allreduce
+    hierarchical: bool = False           # one psum per mesh axis
+    hierarchy_levels: int = 2            # mesh axes a hierarchical plan spans
+    wire_dtype: Optional[str] = None     # e.g. "bfloat16"; None = native
+    use_kernel: bool = False             # Pallas densify kernel
+
+    def __post_init__(self):
+        if self.algorithm not in ("tf_algorithm1", "proposed_algorithm2"):
+            raise ValueError(
+                f"unknown accumulation algorithm: {self.algorithm}")
+        object.__setattr__(self, "wire_dtype",
+                           canonical_dtype(self.wire_dtype))
+
+    @property
+    def dense_collective(self) -> str:
+        if self.reduce_scatter:
+            return REDUCE_SCATTER
+        if self.hierarchical:
+            return HIERARCHICAL
+        return ALLREDUCE
+
+
+# ---------------------------------------------------------------------------
+# Static leaf specs + classification (Alg. 1 / Alg. 2, shapes only)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DenseSpec:
+    shape: Tuple[int, ...]
+    dtype: str
+
+    @property
+    def size(self) -> int:
+        return math.prod(self.shape)
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseSpec:
+    rows: int
+    dense_shape: Tuple[int, ...]
+    dtype: str
+    index_dtype: str = "int32"
+
+    @property
+    def row_elems(self) -> int:
+        return math.prod(self.dense_shape[1:])
+
+
+LeafSpec = Union[DenseSpec, SparseSpec]
+
+
+def _is_leaf(x) -> bool:
+    """Grad-tree leaves: dense arrays, IndexedSlices, or contribution
+    lists (variables with multiple uses, e.g. tied embeddings)."""
+    return isinstance(x, (IndexedSlices, list)) or hasattr(x, "shape")
+
+
+def contribution_spec(g) -> LeafSpec:
+    if isinstance(g, IndexedSlices):
+        return SparseSpec(rows=int(g.indices.shape[0]),
+                          dense_shape=tuple(g.dense_shape),
+                          dtype=jnp.dtype(g.values.dtype).name,
+                          index_dtype=jnp.dtype(g.indices.dtype).name)
+    return DenseSpec(shape=tuple(g.shape), dtype=jnp.dtype(g.dtype).name)
+
+
+def classify(contribs: Tuple[LeafSpec, ...],
+             config: ExchangeConfig) -> LeafSpec:
+    """Static mirror of ``accumulation.accumulate_gradients``: the
+    post-accumulation representation of one variable's contributions."""
+    def result_dtype() -> str:
+        out = jnp.dtype(contribs[0].dtype)
+        for c in contribs[1:]:
+            out = jnp.promote_types(out, c.dtype)
+        return out.name
+
+    def dense_result() -> DenseSpec:
+        shape = next((c.shape for c in contribs
+                      if isinstance(c, DenseSpec)), None)
+        if shape is None:                # all-sparse: densified shape
+            shape = contribs[0].dense_shape
+        return DenseSpec(shape=tuple(shape), dtype=result_dtype())
+
+    def gather_result(specs: Sequence[LeafSpec]) -> SparseSpec:
+        # dense contributions downgrade to all-rows slices (Alg. 1)
+        rows = sum(c.rows if isinstance(c, SparseSpec) else c.shape[0]
+                   for c in specs)
+        shape = next(c.dense_shape for c in specs
+                     if isinstance(c, SparseSpec))
+        idx = next((c.index_dtype for c in specs
+                    if isinstance(c, SparseSpec)), "int32")
+        return SparseSpec(rows=rows, dense_shape=tuple(shape),
+                          dtype=result_dtype(), index_dtype=idx)
+
+    any_sparse = any(isinstance(c, SparseSpec) for c in contribs)
+    any_dense = any(isinstance(c, DenseSpec) for c in contribs)
+
+    if config.sparse_as_dense:               # Listing-1 pre-pass: all dense
+        return dense_result()
+    if len(contribs) < 2:                    # pass-through
+        return contribs[0]
+    if not any_sparse:
+        return dense_result()                # dense reduce
+    if config.algorithm == "tf_algorithm1":
+        return gather_result(contribs)       # ANY sparse => gather
+    if config.algorithm == "proposed_algorithm2":
+        if any_dense:
+            return dense_result()            # Alg. 2 lines 5-7: densify
+        return gather_result(contribs)       # all-sparse stays sparse
+    raise ValueError(f"unknown accumulation algorithm: {config.algorithm}")
+
+
+# ---------------------------------------------------------------------------
+# Runtime accumulation matching the classification
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _Pending:
+    """A dense-destined leaf whose densification is deferred to pack time
+    (so the scatter-add fuses with the wire-dtype downcast)."""
+    slices: Optional[IndexedSlices]
+    dense: Optional[jax.Array]
+
+
+def _accumulate_leaf(leaf, spec: LeafSpec, config: ExchangeConfig):
+    """Accumulate one variable's contributions to the representation the
+    plan classified.  Dense-destined leaves with sparse contributions
+    come back as ``_Pending`` — densified later, inside pack."""
+    contribs = leaf if isinstance(leaf, list) else [leaf]
+    sparse = [c for c in contribs if isinstance(c, IndexedSlices)]
+    dense = [c for c in contribs if not isinstance(c, IndexedSlices)]
+
+    if isinstance(spec, SparseSpec):         # gather path
+        if len(contribs) == 1:
+            return contribs[0]
+        slices = [c if isinstance(c, IndexedSlices)
+                  else accumulation.dense_to_slices(c) for c in contribs]
+        return concat_slices(tuple(slices))
+
+    # dense path
+    dense_sum = None
+    if dense:
+        dense_sum = dense[0]
+        for g in dense[1:]:
+            dense_sum = dense_sum + g
+    if not sparse:
+        return dense_sum
+    merged = sparse[0] if len(sparse) == 1 else concat_slices(tuple(sparse))
+    return _Pending(slices=merged, dense=dense_sum)
+
+
+def _materialise(x, config: ExchangeConfig) -> jax.Array:
+    """Densify a pending leaf (XLA scatter-add or Pallas kernel)."""
+    if isinstance(x, _Pending):
+        out = None
+        if x.slices is not None:
+            out = accumulation.densify(x.slices,
+                                       use_kernel=config.use_kernel)
+        if x.dense is not None:
+            out = x.dense if out is None else out + x.dense
+        return out
+    if isinstance(x, IndexedSlices):
+        return accumulation.densify(x, use_kernel=config.use_kernel)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# The plan
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DenseBucket:
+    """One fusion buffer: contiguous slots over the dense-leaf list.
+
+    Buckets are wire-dtype-homogeneous by construction (leaves are
+    grouped before bucketing), so the packed buffer never promotes.
+    """
+    slots: Tuple[fusion._Slot, ...]     # leaf_idx indexes dense_leaf_ids
+    collective: str
+    n_elems: int
+    wire_dtype: str
+
+
+@dataclasses.dataclass(frozen=True)
+class ExchangePlan:
+    """Static schedule for one gradient-tree structure."""
+    treedef: Any
+    contrib_specs: Tuple[Tuple[LeafSpec, ...], ...]
+    leaf_specs: Tuple[LeafSpec, ...]     # post-accumulation, per leaf
+    dense_leaf_ids: Tuple[int, ...]
+    dense_buckets: Tuple[DenseBucket, ...]
+    gather_leaf_ids: Tuple[int, ...]
+    config: ExchangeConfig
+
+    # -- static accounting ---------------------------------------------------
+    @property
+    def n_leaves(self) -> int:
+        return len(self.leaf_specs)
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self.dense_buckets) + len(self.gather_leaf_ids)
+
+    @property
+    def n_collectives(self) -> int:
+        n = 0
+        for b in self.dense_buckets:
+            n += (self.config.hierarchy_levels
+                  if b.collective == HIERARCHICAL
+                  else COLLECTIVES_PER_BUCKET[b.collective])
+        return n + len(self.gather_leaf_ids) * COLLECTIVES_PER_BUCKET[
+            ALLGATHER]
+
+    def _wire_dtype_for(self, spec: LeafSpec) -> str:
+        return self.config.wire_dtype or spec.dtype
+
+    def wire_bytes(self, n_workers: Union[int, Sequence[int]]) -> int:
+        """Bytes moved per worker per step — the single source of truth
+        shared by the benchmarks, the roofline model and the dry-run
+        collective audit.  Hierarchical plans require ``n_workers`` as a
+        per-level tuple (e.g. ``(n_pods, workers_per_pod)``) matching
+        ``config.hierarchy_levels``."""
+        levels = (tuple(n_workers) if not isinstance(n_workers, int)
+                  else (n_workers,))
+        if self.config.hierarchical \
+                and len(levels) != self.config.hierarchy_levels:
+            raise ValueError(
+                f"hierarchical plan with {self.config.hierarchy_levels} "
+                f"levels needs per-level worker counts, got {n_workers!r}")
+        p = math.prod(levels)
+        total = 0
+        for b in self.dense_buckets:
+            dt = b.wire_dtype
+            if b.collective == REDUCE_SCATTER:
+                total += comm.reduce_scatter_wire_bytes(b.n_elems, dt, p)
+                total += comm.allgather_dense_wire_bytes(b.n_elems, dt, p)
+            elif b.collective == HIERARCHICAL:
+                total += comm.hierarchical_allreduce_wire_bytes(
+                    (b.n_elems,), dt, levels)
+            else:
+                total += comm.allreduce_wire_bytes((b.n_elems,), dt, p)
+        for i in self.gather_leaf_ids:
+            s = self.leaf_specs[i]
+            total += comm.allgather_wire_bytes(
+                s.rows, s.row_elems, self._wire_dtype_for(s), p,
+                index_dtype=s.index_dtype)
+        return total
+
+    def buffer_bytes(self, n_workers: Union[int, Sequence[int]]) -> int:
+        """Size of the accumulated representation each worker holds after
+        exchange (paper Fig. 3 / Fig. 5): gather buffers grow linearly in
+        P, dense buffers are constant."""
+        p = (n_workers if isinstance(n_workers, int)
+             else math.prod(n_workers))
+        total = self.dense_bytes
+        for i in self.gather_leaf_ids:
+            s = self.leaf_specs[i]
+            # the gathered buffer holds WIRE-dtype values (execute casts
+            # before the allgather) plus native-width indices
+            total += comm.gathered_buffer_bytes(
+                s.rows, s.row_elems, self._wire_dtype_for(s), p,
+                index_dtype=s.index_dtype)
+        return total
+
+    @property
+    def dense_bytes(self) -> int:
+        """Total dense accumulated gradient bytes (P-independent)."""
+        return sum(comm.dense_buffer_bytes(self.leaf_specs[i].shape,
+                                           self.leaf_specs[i].dtype)
+                   for i in self.dense_leaf_ids)
+
+    @property
+    def sparse_bytes_per_worker(self) -> int:
+        """Per-worker IndexedSlices bytes entering the gather collectives
+        (the paper model's S term)."""
+        total = 0
+        for i in self.gather_leaf_ids:
+            s = self.leaf_specs[i]
+            total += s.rows * (
+                s.row_elems * comm.dtype_bytes(s.dtype)
+                + comm.dtype_bytes(s.index_dtype))
+        return total
+
+    def describe(self) -> str:
+        """Human-readable bucket/collective table (docs + dry-run)."""
+        lines = ["| bucket | kind | collective | elems | wire dtype |",
+                 "|---|---|---|---|---|"]
+        for k, b in enumerate(self.dense_buckets):
+            lines.append(f"| {k} | dense x{len(b.slots)} | {b.collective} "
+                         f"| {b.n_elems} | {b.wire_dtype} |")
+        for k, i in enumerate(self.gather_leaf_ids):
+            s = self.leaf_specs[i]
+            lines.append(f"| g{k} | sparse rows={s.rows} | allgather "
+                         f"| {s.rows * s.row_elems} "
+                         f"| {self._wire_dtype_for(s)} |")
+        return "\n".join(lines)
+
+    # -- execution -----------------------------------------------------------
+    def accumulate(self, grads) -> List[Any]:
+        """Step 1 at runtime: per-leaf accumulation to the classified
+        representation (dense leaves may come back ``_Pending``)."""
+        leaves, treedef = jax.tree_util.tree_flatten(grads,
+                                                     is_leaf=_is_leaf)
+        if treedef != self.treedef:
+            raise ValueError(f"grad tree structure changed: {treedef} "
+                             f"!= planned {self.treedef}")
+        return [_accumulate_leaf(leaf, spec, self.config)
+                for leaf, spec in zip(leaves, self.leaf_specs)]
+
+    def accumulate_tree(self, grads):
+        """Step 1 as a public pytree: dense-destined leaves fully
+        densified (no deferred ``_Pending``), gather-destined leaves
+        still IndexedSlices — the paper's per-variable accumulation
+        result before any collective."""
+        out = [_materialise(x, self.config) if isinstance(x, _Pending)
+               else x for x in self.accumulate(grads)]
+        return jax.tree_util.tree_unflatten(self.treedef, out)
+
+    def pack_bucket(self, bucket: DenseBucket, leaves: List[Any]
+                    ) -> jax.Array:
+        """Fuse a bucket into one 1-D wire buffer.  Densification of
+        deferred-sparse slots happens HERE (Pallas kernel if configured),
+        fused with the wire-dtype downcast."""
+        parts = []
+        for slot in bucket.slots:
+            leaf_id = self.dense_leaf_ids[slot.leaf_idx]
+            x = _materialise(leaves[leaf_id], self.config)
+            parts.append(x.reshape(-1).astype(bucket.wire_dtype))
+        return parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+
+    def unpack_bucket(self, bucket: DenseBucket, buf: jax.Array,
+                      out: List[Any], inv_scale) -> None:
+        """Invert ``pack_bucket``: split, reshape, upcast to each leaf's
+        original dtype, apply gradient averaging."""
+        for slot in bucket.slots:
+            leaf_id = self.dense_leaf_ids[slot.leaf_idx]
+            spec = self.leaf_specs[leaf_id]
+            x = jax.lax.dynamic_slice_in_dim(buf, slot.offset, slot.size)
+            x = x.reshape(spec.shape).astype(spec.dtype)
+            if inv_scale is not None:
+                x = x * inv_scale
+            out[leaf_id] = x
+
+    def execute(self, grads, axis_name: comm.AxisNames,
+                average: bool = True):
+        """Steps 1-3: accumulate, exchange per the schedule, densify.
+
+        Must be called under ``shard_map``/``pjit`` with the mesh axes
+        bound (or with ``axis_name=None`` for the local no-op path).
+        """
+        leaves = self.accumulate(grads)
+        axes = tuple(a for a in ([axis_name] if isinstance(axis_name, str)
+                                 else (axis_name or ())))
+        if self.config.hierarchical and axes \
+                and len(axes) != self.config.hierarchy_levels:
+            raise ValueError(
+                f"hierarchical plan spans {self.config.hierarchy_levels} "
+                f"mesh axes but got axis_name={axis_name!r}")
+        p = comm.axis_size(axes) if axes else 1
+        inv_scale = (1.0 / p) if average and axes else None
+        out: List[Any] = list(leaves)
+
+        # gather buckets: allgather the slices, densify, average
+        for i in self.gather_leaf_ids:
+            s = leaves[i]
+            if self.config.wire_dtype is not None:
+                s = IndexedSlices(s.indices,
+                                  s.values.astype(self.config.wire_dtype),
+                                  s.dense_shape)
+            g = comm.all_gather_slices(s, axes if axes else None)
+            if self.config.wire_dtype is not None:
+                # only the WIRE is narrow: upcast before the scatter-add
+                # so duplicate rows accumulate at full precision
+                g = IndexedSlices(g.indices,
+                                  g.values.astype(self.leaf_specs[i].dtype),
+                                  g.dense_shape)
+            x = accumulation.densify(g, use_kernel=self.config.use_kernel)
+            x = x.astype(self.leaf_specs[i].dtype)
+            if inv_scale is not None:
+                x = x * inv_scale
+            out[i] = x
+
+        # dense buckets: pack (densify fused), one collective, unpack
+        for bucket in self.dense_buckets:
+            buf = self.pack_bucket(bucket, leaves)
+            if axes:
+                if bucket.collective == REDUCE_SCATTER:
+                    pad = -len(buf) % p
+                    if pad:
+                        buf = jnp.pad(buf, (0, pad))
+                    shard = jax.lax.psum_scatter(
+                        buf, axes if len(axes) > 1 else axes[0],
+                        scatter_dimension=0, tiled=True)
+                    buf = comm.all_gather_dense(shard,
+                                                axes)[:bucket.n_elems]
+                elif bucket.collective == HIERARCHICAL:
+                    buf = comm.two_level_all_reduce(buf, axes,
+                                                    average=False)
+                else:
+                    buf = comm.all_reduce_dense(buf, axes, average=False)
+            self.unpack_bucket(bucket, buf, out, inv_scale)
+        # every leaf is either bucketed or gathered: nothing pending here
+        return jax.tree_util.tree_unflatten(self.treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# Compilation + cache
+# ---------------------------------------------------------------------------
+
+_PLAN_CACHE: Dict[Any, ExchangePlan] = {}
+_PLAN_CACHE_MAX = 256      # specs include sparse row counts, which vary
+_CACHE_STATS = {"hits": 0, "misses": 0}
+
+
+def _build_plan(treedef, contrib_specs: Tuple[Tuple[LeafSpec, ...], ...],
+                config: ExchangeConfig) -> ExchangePlan:
+    leaf_specs = tuple(classify(c, config) for c in contrib_specs)
+    dense_ids = tuple(i for i, s in enumerate(leaf_specs)
+                      if isinstance(s, DenseSpec))
+    gather_ids = tuple(i for i, s in enumerate(leaf_specs)
+                       if isinstance(s, SparseSpec))
+
+    # bucket dense leaves with the Horovod fusion planner, one group per
+    # wire dtype (so packed buffers never promote and byte accounting is
+    # exact); thresholds are measured in WIRE bytes so bf16 wires pack
+    # twice the elements per bucket
+    groups: Dict[str, List[int]] = {}
+    for i in dense_ids:
+        dt = config.wire_dtype or leaf_specs[i].dtype
+        groups.setdefault(dt, []).append(i)
+    threshold = (config.fusion_threshold
+                 if config.fusion_threshold is not None else 0)
+    dense_ids = tuple(i for ids in groups.values() for i in ids)
+    buckets = []
+    base = 0
+    for dt, ids in groups.items():
+        structs = [jax.ShapeDtypeStruct(leaf_specs[i].shape, dt)
+                   for i in ids]
+        fplan = fusion.plan_fusion(structs, threshold_bytes=threshold)
+        for bucket in fplan.buckets:
+            slots = tuple(dataclasses.replace(s, leaf_idx=s.leaf_idx + base)
+                          for s in bucket)
+            buckets.append(DenseBucket(
+                slots=slots, collective=config.dense_collective,
+                n_elems=sum(s.size for s in slots), wire_dtype=dt))
+        base += len(ids)
+    buckets = tuple(buckets)
+    return ExchangePlan(treedef=treedef, contrib_specs=contrib_specs,
+                        leaf_specs=leaf_specs, dense_leaf_ids=dense_ids,
+                        dense_buckets=buckets, gather_leaf_ids=gather_ids,
+                        config=config)
+
+
+def compile_plan(grads, config: ExchangeConfig) -> ExchangePlan:
+    """Compile (or fetch from cache) the ExchangePlan for a gradient
+    tree.  Works on concrete arrays, tracers, and ShapeDtypeStructs —
+    only treedef + shapes/dtypes matter."""
+    leaves, treedef = jax.tree_util.tree_flatten(grads, is_leaf=_is_leaf)
+    contrib_specs = tuple(
+        tuple(contribution_spec(c)
+              for c in (leaf if isinstance(leaf, list) else [leaf]))
+        for leaf in leaves)
+    key = (treedef, contrib_specs, config)
+    cached = _PLAN_CACHE.get(key)
+    if cached is not None:
+        _CACHE_STATS["hits"] += 1
+        return cached
+    _CACHE_STATS["misses"] += 1
+    plan = _build_plan(treedef, contrib_specs, config)
+    if len(_PLAN_CACHE) >= _PLAN_CACHE_MAX:       # FIFO bound: variable
+        _PLAN_CACHE.pop(next(iter(_PLAN_CACHE)))  # token counts would
+    _PLAN_CACHE[key] = plan                       # otherwise grow forever
+    return plan
+
+
+def plan_cache_info() -> Dict[str, int]:
+    return dict(_CACHE_STATS, size=len(_PLAN_CACHE))
+
+
+def clear_plan_cache() -> None:
+    _PLAN_CACHE.clear()
+    _CACHE_STATS["hits"] = _CACHE_STATS["misses"] = 0

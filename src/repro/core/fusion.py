@@ -30,6 +30,7 @@ class _Slot:
     offset: int     # element offset within the bucket
     size: int       # element count
     shape: Tuple[int, ...]
+    dtype: str = "float32"   # original leaf dtype, restored by unpack
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,17 +56,19 @@ def plan_fusion(grads, threshold_bytes: int = DEFAULT_FUSION_THRESHOLD
     for i in order:
         leaf = leaves[i]
         nbytes = leaf.size * leaf.dtype.itemsize
+        dtype = jnp.dtype(leaf.dtype).name
         placed = False
         for b, fb in enumerate(fill_bytes):
             if fb + nbytes <= threshold_bytes:
                 offset = sum(s.size for s in buckets[b])
                 buckets[b].append(_Slot(i, offset, leaf.size,
-                                        tuple(leaf.shape)))
+                                        tuple(leaf.shape), dtype))
                 fill_bytes[b] += nbytes
                 placed = True
                 break
         if not placed:
-            buckets.append([_Slot(i, 0, leaf.size, tuple(leaf.shape))])
+            buckets.append([_Slot(i, 0, leaf.size, tuple(leaf.shape),
+                                  dtype)])
             fill_bytes.append(nbytes)
     return FusionPlan(buckets=tuple(tuple(b) for b in buckets),
                       treedef=treedef, n_leaves=len(leaves))
@@ -86,7 +89,13 @@ def pack(grads, plan: FusionPlan, dtype=None) -> List[jax.Array]:
 
 
 def unpack(buffers: Sequence[jax.Array], plan: FusionPlan, like=None):
-    """Invert ``pack``: split buffers back into the original pytree."""
+    """Invert ``pack``: split buffers back into the original pytree.
+
+    The round-trip is lossless-by-default: each slot records its leaf's
+    original dtype at planning time and ``unpack`` restores it even when
+    ``pack`` downcast to a wire dtype (``like`` still overrides, for
+    callers that want a different target tree).
+    """
     leaves: List[Optional[jax.Array]] = [None] * plan.n_leaves
     like_leaves = (jax.tree_util.tree_leaves(like)
                    if like is not None else None)
@@ -96,6 +105,8 @@ def unpack(buffers: Sequence[jax.Array], plan: FusionPlan, like=None):
             x = x.reshape(slot.shape)
             if like_leaves is not None:
                 x = x.astype(like_leaves[slot.leaf_idx].dtype)
+            else:
+                x = x.astype(slot.dtype)
             leaves[slot.leaf_idx] = x
     return jax.tree_util.tree_unflatten(plan.treedef, leaves)
 

@@ -98,6 +98,10 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
         # (measured 1.7x prefill memory-term win at 4096 —
         # EXPERIMENTS.md §Perf H5).  Explicit block_k is honoured.
         bk = 4096 if block_k == DEFAULT_BLOCK_K else block_k
+        # never pad beyond the real kv length: short sequences would
+        # otherwise execute (and the roofline would bill) up to
+        # block_k/sk times the useful attention flops
+        bk = min(bk, _round_up(k.shape[1], 8))
         return _chunked_attention(q, k, v, causal=causal, window=window,
                                   block_k=bk)
     b, sq, _, d = q.shape

@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import INPUT_SHAPES, get_config
-from repro.core import DistributedOptimizer
+from repro.core import DistributedOptimizer, comm
 from repro.launch import flops as flops_lib
 from repro.launch import hlo as hlo_lib
 from repro.launch import mesh as mesh_lib
@@ -160,6 +160,8 @@ def analyse(lowered, meta: Dict[str, Any], n_chips: int,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):      # older jax returns [dict]
+        cost = cost[0] if cost else {}
     try:
         hlo = compiled.as_text()
     except Exception:
@@ -206,6 +208,102 @@ def analyse(lowered, meta: Dict[str, Any], n_chips: int,
         n_chips=n_chips,
     )
     return out
+
+
+def audit_exchange_plan(arch: str = "transformer-big", n_workers: int = 8,
+                        reduced: bool = True,
+                        sparse_as_dense: bool = True,
+                        algorithm: str = "tf_algorithm1",
+                        fusion_threshold: Optional[int] = None,
+                        reduce_scatter: bool = False,
+                        wire_dtype: Optional[str] = None,
+                        batch_per_worker: int = 2,
+                        seq_len: int = 32) -> Dict[str, Any]:
+    """Check the static ExchangePlan against lowered HLO.
+
+    Lowers the plan-scheduled exchange under ``shard_map`` on
+    ``n_workers`` devices and compares the plan's ``n_collectives`` /
+    ``wire_bytes`` with the collective ops actually present in the
+    compiled HLO (the same audit ``analyse`` applies to full steps).
+    One gather bucket lowers to TWO all-gather ops (indices + values),
+    exactly as Horovod's IndexedSlices allgather does.
+    """
+    import numpy as np
+    from jax.sharding import Mesh, PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+
+    from repro.data import make_pipeline
+    from repro.optim import adamw as adamw_opt
+    from repro.training.gradients import grad_contributions
+
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    pipe = make_pipeline(cfg, batch_per_host=batch_per_worker,
+                         seq_len=seq_len)
+    batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(0).items()}
+    grads, _, _ = grad_contributions(model, params, batch,
+                                     sparse_embedding=True)
+
+    opt = DistributedOptimizer(
+        adamw_opt(noam_schedule(cfg.d_model)),
+        sparse_as_dense=sparse_as_dense, algorithm=algorithm,
+        axis_name=("data",), fusion_threshold=fusion_threshold,
+        reduce_scatter=reduce_scatter, wire_dtype=wire_dtype)
+    plan = opt.plan(grads)
+
+    if len(jax.devices()) < n_workers:
+        # the module-top XLA_FLAGS override only helps if jax was not
+        # initialised before this module was imported
+        raise RuntimeError(
+            f"exchange audit needs >= {n_workers} devices, found "
+            f"{len(jax.devices())}; set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n_workers} before "
+            f"jax initialises")
+    mesh = Mesh(np.array(jax.devices()[:n_workers]), ("data",))
+    ex = shard_map(opt.exchange, mesh=mesh, in_specs=(P(),),
+                   out_specs=P(), check_rep=False)
+    hlo = jax.jit(ex).lower(grads).compile().as_text()
+    counts = hlo_lib.count_collectives(hlo)
+    coll_bytes = {k: v for k, v in hlo_lib.analyze_collectives(hlo).items()
+                  if k != "__bytes__"}
+
+    # per-op ring wire bytes implied by the HLO result sizes
+    p = n_workers
+    hlo_wire = (2 * (p - 1) / p * coll_bytes.get("all-reduce", 0.0)
+                + (p - 1) / p * coll_bytes.get("all-gather", 0.0)
+                + (p - 1) * coll_bytes.get("reduce-scatter", 0.0))
+
+    n_gather = len(plan.gather_leaf_ids)
+    expected_hlo_ops = plan.n_collectives + n_gather  # indices+values
+    hlo_ops = sum(counts.values())
+    planned_wire = plan.wire_bytes(p)
+    note = None
+    if plan.config.wire_dtype is not None \
+            and jax.default_backend() == "cpu":
+        # the CPU backend upcasts narrow collectives to f32 (see
+        # hlo.analyze_collectives); the TPU wire stays at wire_dtype, so
+        # the planned/HLO ratio is itemsize(wire)/4 here, 1.0 on TPU
+        note = ("cpu backend computes %s collectives in f32; expect "
+                "wire_ratio %.2f" % (plan.config.wire_dtype,
+                                     comm.dtype_bytes(
+                                         plan.config.wire_dtype) / 4))
+    return dict(
+        note=note,
+        arch=arch, reduced=reduced, n_workers=p,
+        strategy=opt.exchange_stats(grads, p).strategy,
+        planned_n_collectives=plan.n_collectives,
+        planned_hlo_ops=expected_hlo_ops,
+        hlo_ops=hlo_ops,
+        hlo_counts=counts,
+        counts_match=hlo_ops == expected_hlo_ops,
+        planned_wire_bytes=planned_wire,
+        hlo_wire_bytes=hlo_wire,
+        wire_ratio=(planned_wire / hlo_wire if hlo_wire else None),
+        plan_table=plan.describe(),
+    )
 
 
 def model_flops(arch: str, shape_name: str) -> Dict[str, float]:
@@ -270,7 +368,19 @@ def param_counts(cfg) -> tuple:
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
-    ap.add_argument("--shape", required=True, choices=list(INPUT_SHAPES))
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES))
+    ap.add_argument("--audit-exchange", action="store_true",
+                    help="audit the static ExchangePlan against lowered "
+                         "HLO collectives instead of running a dry-run")
+    ap.add_argument("--audit-workers", type=int, default=8)
+    ap.add_argument("--full-size", action="store_true",
+                    help="with --audit-exchange: use the full (not "
+                         "reduced) config")
+    ap.add_argument("--grad-accum", default="dense_reduce",
+                    choices=["sparse_gather", "dense_reduce"])
+    ap.add_argument("--fusion-threshold", type=int, default=None)
+    ap.add_argument("--reduce-scatter", action="store_true")
+    ap.add_argument("--wire-dtype", default=None)
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--mode", default="gspmd", choices=["gspmd"])
     ap.add_argument("--no-fsdp", action="store_true")
@@ -288,6 +398,22 @@ def main(argv=None) -> int:
     ap.add_argument("--print-hlo", action="store_true")
     args = ap.parse_args(argv)
 
+    if args.audit_exchange:
+        result = audit_exchange_plan(
+            arch=args.arch, n_workers=args.audit_workers,
+            reduced=not args.full_size,
+            sparse_as_dense=args.grad_accum == "dense_reduce",
+            fusion_threshold=args.fusion_threshold,
+            reduce_scatter=args.reduce_scatter,
+            wire_dtype=args.wire_dtype)
+        print(json.dumps(result, indent=2, default=str))
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump(result, f, indent=2, default=str)
+        return 0 if result["counts_match"] else 1
+
+    if args.shape is None:
+        ap.error("--shape is required unless --audit-exchange is given")
     n_chips = 512 if args.multi_pod else 256
     lowered, meta, fn_args = lower_step(
         args.arch, args.shape, args.multi_pod, mode=args.mode,

@@ -77,6 +77,26 @@ def _instr_result_bytes(line: str) -> int:
     return _shape_bytes(m.group(1)) if m else 0
 
 
+def count_collectives(hlo: str) -> Dict[str, int]:
+    """Number of collective LAUNCHES per op kind in the HLO text (flat,
+    no while-trip multipliers — for auditing explicitly-scheduled
+    exchange programs, which have no loops).
+
+    Async pairs (``-start``/``-done``) count once.
+    """
+    counts: Dict[str, int] = {}
+    for name, lines in parse_computations(hlo).items():
+        for line in lines:
+            op = _instr_opcode(line)
+            if op.endswith("-done"):
+                continue
+            base = op.replace("-start", "")
+            if base in ("all-gather", "all-reduce", "reduce-scatter",
+                        "all-to-all", "collective-permute"):
+                counts[base] = counts.get(base, 0) + 1
+    return counts
+
+
 def analyze_collectives(hlo: str) -> Dict[str, float]:
     """Collective bytes per op type, while-trip-count-aware."""
     comps = parse_computations(hlo)

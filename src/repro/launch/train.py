@@ -49,6 +49,8 @@ def build_optimizer(args, cfg) -> DistributedOptimizer:
         algorithm=args.algorithm,
         axis_name=axis,
         fusion_threshold=args.fusion_threshold,
+        reduce_scatter=args.reduce_scatter,
+        wire_dtype=args.wire_dtype,
     )
 
 
@@ -64,6 +66,13 @@ def main(argv=None) -> int:
     ap.add_argument("--algorithm", default="tf_algorithm1",
                     choices=["tf_algorithm1", "proposed_algorithm2"])
     ap.add_argument("--fusion-threshold", type=int, default=None)
+    ap.add_argument("--reduce-scatter", action="store_true",
+                    help="exchange dense buckets via reduce-scatter + "
+                         "allgather (ZeRO-style) instead of allreduce")
+    ap.add_argument("--wire-dtype", default=None,
+                    choices=[None, "bf16", "bfloat16", "f16", "float16"],
+                    help="downcast fusion buffers to this dtype on the "
+                         "wire (upcast on unpack)")
     ap.add_argument("--batch-per-worker", type=int, default=4)
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--steps", type=int, default=50)

@@ -60,3 +60,34 @@ def test_fusion_reduces_collective_launches():
     n_unfused = len(jax.tree_util.tree_leaves(tree))
     n_fused = fusion.collective_launches(tree, threshold_bytes=1 << 20)
     assert n_fused == 1 < n_unfused
+
+
+def test_pack_downcast_unpack_restores_dtype_without_like():
+    """Regression: pack(dtype=bf16) used to return bf16 leaves unless the
+    caller remembered to pass ``like`` — the round-trip is now
+    lossless-by-default (the wire_dtype seam in core.exchange)."""
+    rng = np.random.default_rng(0)
+    tree = {"a": jnp.asarray(rng.standard_normal((6, 5)), jnp.float32),
+            "b": jnp.asarray(rng.standard_normal((17,)), jnp.float32)}
+    plan = fusion.plan_fusion(tree, threshold_bytes=1 << 20)
+    buffers = fusion.pack(tree, plan, dtype=jnp.bfloat16)
+    assert all(b.dtype == jnp.bfloat16 for b in buffers)
+    out = fusion.unpack(buffers, plan)           # no `like` needed
+    for k in tree:
+        assert out[k].dtype == tree[k].dtype
+        np.testing.assert_allclose(np.asarray(out[k]),
+                                   np.asarray(tree[k]),
+                                   rtol=1e-2, atol=1e-2)  # bf16 wire
+
+
+def test_pack_unpack_mixed_dtypes_lossless():
+    """Without a wire dtype the round-trip must be exact, including each
+    leaf's own dtype in a mixed-precision tree."""
+    tree = {"w32": jnp.ones((4, 4), jnp.float32) * 1.5,
+            "w16": jnp.ones((3, 3), jnp.bfloat16) * 2.5}
+    plan = fusion.plan_fusion(tree, threshold_bytes=1 << 20)
+    out = fusion.unpack(fusion.pack(tree, plan), plan)
+    for k in tree:
+        assert out[k].dtype == tree[k].dtype, k
+        np.testing.assert_array_equal(
+            np.asarray(out[k], np.float32), np.asarray(tree[k], np.float32))
