@@ -30,7 +30,8 @@ _DIST_CODE = textwrap.dedent("""
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import Mesh, PartitionSpec as P
     from jax.experimental.shard_map import shard_map
-    from repro.core import IndexedSlices, DistributedOptimizer
+    from repro.core import (ExchangeConfig, IndexedSlices,
+                            DistributedOptimizer)
     from repro.optim import adamw
 
     V, D, N = 33708, 1024, 5000          # the paper's exact tensor shapes
@@ -45,11 +46,13 @@ _DIST_CODE = textwrap.dedent("""
     # gather   -> Alg.1 gather bucket (allgather, the pathology)
     # reduce   -> sparse_as_dense dense bucket (allreduce, the fix)
     # rs_bf16  -> beyond-paper: reduce-scatter + allgather on a bf16 wire
+    # int8     -> beyond-paper: quantised int8 wire + per-bucket scales
     STRATEGIES = {
-        'gather': dict(sparse_as_dense=False),
-        'reduce': dict(sparse_as_dense=True),
-        'rs_bf16': dict(sparse_as_dense=True, reduce_scatter=True,
-                        wire_dtype='bfloat16'),
+        'gather': ExchangeConfig(sparse_as_dense=False),
+        'reduce': ExchangeConfig(sparse_as_dense=True),
+        'rs_bf16': ExchangeConfig(sparse_as_dense=True,
+                                  reduce_scatter=True, codec='bf16'),
+        'int8': ExchangeConfig(sparse_as_dense=True, codec='int8'),
     }
 
     def step(i, v, d, opt):
@@ -57,8 +60,9 @@ _DIST_CODE = textwrap.dedent("""
         return opt.exchange(g)['emb'][None]
 
     out, wire = {}, {}
-    for name, kw in STRATEGIES.items():
-        opt = DistributedOptimizer(adamw(1e-3), axis_name=('data',), **kw)
+    for name, cfg in STRATEGIES.items():
+        opt = DistributedOptimizer(adamw(1e-3), exchange=cfg,
+                                   axis_name=('data',))
         g0 = {'emb': [IndexedSlices(idx[0], vals[0], (V, D)), dense[0]]}
         wire[name] = opt.exchange_stats(g0, n_workers=P_).wire_bytes
         sm = jax.jit(shard_map(functools.partial(step, opt=opt),
@@ -75,9 +79,11 @@ _DIST_CODE = textwrap.dedent("""
     print('GATHER_US', out['gather'] * 1e6)
     print('REDUCE_US', out['reduce'] * 1e6)
     print('RSBF16_US', out['rs_bf16'] * 1e6)
+    print('INT8_US', out['int8'] * 1e6)
     print('WIRE_GATHER', wire['gather'])
     print('WIRE_REDUCE', wire['reduce'])
     print('WIRE_RSBF16', wire['rs_bf16'])
+    print('WIRE_INT8', wire['int8'])
 """)
 
 
@@ -94,15 +100,18 @@ def run(emit):
         def grab(tag):
             return float(res.stdout.split(tag)[1].split()[0])
         g, r, rs = grab("GATHER_US"), grab("REDUCE_US"), grab("RSBF16_US")
+        q8 = grab("INT8_US")
         emit("fig5_time_gather_P8_paper_shapes", g, "allgather+apply")
         emit("fig5_time_reduce_P8_paper_shapes", r, "densify+allreduce")
         emit("fig5_time_rs_bf16_P8", rs, "reduce_scatter+allgather_bf16wire")
+        emit("fig5_time_int8_P8", q8, "quantized_int8_wire+scales")
         emit("fig5_time_ratio_P8", 0.0,
              f"{g/r:.1f}x_paper_25x_at_P64_on_OmniPath")
         emit("fig5_planned_wire_P8", 0.0,
              f"gather{grab('WIRE_GATHER')/1e6:.0f}MB_"
              f"reduce{grab('WIRE_REDUCE')/1e6:.0f}MB_"
-             f"rs_bf16{grab('WIRE_RSBF16')/1e6:.0f}MB")
+             f"rs_bf16{grab('WIRE_RSBF16')/1e6:.0f}MB_"
+             f"int8{grab('WIRE_INT8')/1e6:.0f}MB")
 
     # densify kernel: Pallas (interpret) vs XLA scatter oracle
     rng = np.random.default_rng(0)

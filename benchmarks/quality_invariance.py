@@ -14,7 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import DistributedOptimizer
+from repro.core import DistributedOptimizer, ExchangeConfig
 from repro.data import make_pipeline
 from repro.models import build_model
 from repro.optim import adamw
@@ -25,7 +25,8 @@ STEPS = 120
 
 def _train(cfg, model, params, sad: bool, batch: int, steps=STEPS,
            lr=1e-2):
-    opt = DistributedOptimizer(adamw(lr), sparse_as_dense=sad)
+    opt = DistributedOptimizer(
+        adamw(lr), exchange=ExchangeConfig(sparse_as_dense=sad))
     step = make_train_step(model, opt, sparse_embedding=True)
     pipe = make_pipeline(cfg, batch_per_host=batch, seq_len=32,
                          task="copy")

@@ -33,6 +33,9 @@ def run(emit):
         a = json.load(open(EXCHANGE_AUDIT))
         emit("exchange_plan_vs_hlo", 0.0,
              f"{'PASS' if a.get('counts_match') else 'FAIL'}_"
+             f"{a.get('audit_mode', 'shard_map')}_"
+             f"codec:{a.get('codec', 'identity')}_"
+             f"backend:{a.get('backend', 'jax')}_"
              f"coll{a.get('planned_n_collectives')}_"
              f"planned{a.get('planned_wire_bytes', 0)/1e6:.1f}MB_"
              f"hlo{a.get('hlo_wire_bytes', 0)/1e6:.1f}MB")

@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.core import DistributedOptimizer
+from repro.core import DistributedOptimizer, ExchangeConfig
 from repro.data import make_pipeline
 from repro.models import build_model
 from repro.optim import adamw
@@ -33,18 +33,24 @@ def main():
     batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(0).items()}
     grads, _, _ = grad_contributions(model, params, batch,
                                      sparse_embedding=True)
-    for name, sad in [("sparse gather (TF default)", False),
-                      ("dense reduce (the paper's fix)", True)]:
-        opt = DistributedOptimizer(adamw(3e-3), sparse_as_dense=sad)
+    for name, cfg in [
+            ("sparse gather (TF default)", ExchangeConfig()),
+            ("dense reduce (the paper's fix)",
+             ExchangeConfig(sparse_as_dense=True)),
+            ("dense reduce + int8 wire",
+             ExchangeConfig(sparse_as_dense=True, codec="int8"))]:
+        opt = DistributedOptimizer(adamw(3e-3), exchange=cfg)
         stats = opt.exchange_stats(grads, n_workers=64)
         print(f"  {name:33s}: accumulated buffer at 64 workers = "
               f"{stats.accumulated_bytes/1e6:8.1f} MB, "
-              f"wire = {stats.wire_bytes/1e6:8.1f} MB/worker")
+              f"wire = {stats.wire_bytes/1e6:8.1f} MB/worker  "
+              f"[{stats.strategy}]")
 
     # --- and does the choice change the model? NO. -----------------------
     results = {}
     for name, sad in [("gather", False), ("reduce", True)]:
-        opt = DistributedOptimizer(adamw(3e-3), sparse_as_dense=sad)
+        opt = DistributedOptimizer(
+            adamw(3e-3), exchange=ExchangeConfig(sparse_as_dense=sad))
         step = make_train_step(model, opt, sparse_embedding=True)
         tr = Trainer(model, step, pipe,
                      TrainerConfig(total_steps=30, log_every=10))

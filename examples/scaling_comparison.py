@@ -3,15 +3,13 @@ comparison of the accumulation/exchange strategies (buffer size, planned
 wire bytes, measured step time, model equality).
 
 All static numbers come from the ExchangePlan — the same schedule the
-runtime collectives execute.  Beyond the paper's two strategies, the
-planner's reduce-scatter and bf16-wire paths can be compared with
-``--reduce-scatter`` / ``--wire-dtype bf16`` (adds a third row).
-
-Run under emulated workers (pick any N):
+runtime collectives execute.  Beyond the paper's two strategies, any
+codec/backend combination from the registries can be compared with
+``--codec`` / ``--backend`` / ``--reduce-scatter`` (adds a third row):
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
     PYTHONPATH=src python examples/scaling_comparison.py \\
-        [--reduce-scatter] [--wire-dtype bf16]
+        [--reduce-scatter] [--codec bf16|int8] [--backend jax|ringsim]
 """
 import argparse
 import time
@@ -23,7 +21,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.configs import get_config
-from repro.core import DistributedOptimizer
+from repro.core import DistributedOptimizer, ExchangeConfig
 from repro.data import make_pipeline
 from repro.models import build_model
 from repro.optim import adamw
@@ -38,9 +36,15 @@ def main(argv=None):
                          "reduce-scatter + allgather")
     ap.add_argument("--wire-dtype", default=None,
                     choices=[None, "bf16", "bfloat16"],
-                    help="wire dtype for the extra row (downcast on "
-                         "pack, upcast on unpack)")
+                    help="deprecated spelling of --codec")
+    ap.add_argument("--codec", default=None,
+                    help="WireCodec for the extra row (bf16, f16, int8)")
+    ap.add_argument("--backend", default=None,
+                    help="CollectiveBackend for the extra row (jax, "
+                         "ringsim)")
     args = ap.parse_args(argv)
+    if args.wire_dtype and not args.codec:
+        args.codec = args.wire_dtype
 
     n_dev = len(jax.devices())
     cfg = get_config("transformer-big").reduced()
@@ -54,14 +58,16 @@ def main(argv=None):
         model, params, {k: v[:2] for k, v in batch.items()},
         sparse_embedding=True)
 
-    strategies = [("sparse_gather", dict(sparse_as_dense=False)),
-                  ("dense_reduce", dict(sparse_as_dense=True))]
-    if args.reduce_scatter or args.wire_dtype:
-        extra = dict(sparse_as_dense=True,
-                     reduce_scatter=args.reduce_scatter,
-                     wire_dtype=args.wire_dtype)
+    strategies = [("sparse_gather", ExchangeConfig(sparse_as_dense=False)),
+                  ("dense_reduce", ExchangeConfig(sparse_as_dense=True))]
+    if args.reduce_scatter or args.codec or args.backend:
+        extra = ExchangeConfig(sparse_as_dense=True,
+                               reduce_scatter=args.reduce_scatter,
+                               codec=args.codec or "identity",
+                               backend=args.backend or "jax")
         name = "dense" + ("_rs" if args.reduce_scatter else "") + \
-            (f"_{args.wire_dtype}" if args.wire_dtype else "")
+            (f"_{extra.codec}" if extra.codec != "identity" else "") + \
+            (f"_{extra.backend}" if extra.backend != "jax" else "")
         strategies.append((name, extra))
 
     print(f"{n_dev} emulated workers — {cfg.name}  "
@@ -71,9 +77,9 @@ def main(argv=None):
           f"{'n_coll':>7s} {'ms/step':>9s} {'final loss':>10s}")
 
     final_params = {}
-    for name, kwargs in strategies:
-        opt = DistributedOptimizer(adamw(3e-3), axis_name=("data",),
-                                   **kwargs)
+    for name, cfg in strategies:
+        opt = DistributedOptimizer(adamw(3e-3), exchange=cfg,
+                                   axis_name=("data",))
         stats = opt.exchange_stats(grads, n_workers=n_dev)
         step = shard_map(
             make_train_step(model, opt, sparse_embedding=True),
@@ -105,7 +111,8 @@ def main(argv=None):
         d = max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(
             jax.tree_util.tree_leaves(final_params[name]),
             jax.tree_util.tree_leaves(final_params["dense_reduce"])))
-        tol = 5e-2 if "bf" in name else 1e-4
+        tol = 5e-2 if ("bf" in name or "f16" in name
+                       or "int8" in name) else 1e-4
         print(f"{name} vs dense_reduce: {d:.2e} "
               f"({'within wire tolerance' if d < tol else 'BUG'})")
 

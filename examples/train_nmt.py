@@ -20,7 +20,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import DistributedOptimizer
+from repro.core import DistributedOptimizer, ExchangeConfig
 from repro.data import make_pipeline
 from repro.models import build_model
 from repro.optim import adamw, noam_schedule
@@ -64,9 +64,10 @@ def main():
     opt = DistributedOptimizer(
         adamw(noam_schedule(cfg.d_model, warmup_steps=max(args.steps // 4,
                                                           50))),
-        sparse_as_dense=not args.sparse_gather,
-        axis_name=axis,
-        fusion_threshold=128 * 1024 * 1024)   # HOROVOD_FUSION_THRESHOLD
+        exchange=ExchangeConfig(
+            sparse_as_dense=not args.sparse_gather,
+            fusion_threshold=128 * 1024 * 1024),  # HOROVOD_FUSION_THRESHOLD
+        axis_name=axis)
     step = make_train_step(model, opt, sparse_embedding=True)
 
     batch_per_host = args.batch_per_worker

@@ -4,12 +4,18 @@ Public API:
   IndexedSlices           sparse row-slice gradient (tf.IndexedSlices analogue)
   accumulate_gradients    paper Alg. 1 (TF) / Alg. 2 (proposed) accumulation
   ExchangePlan            static collective schedule (bucketing + collectives)
-  DistributedOptimizer    Horovod-style wrapper with sparse_as_dense switch
+  WireCodec               wire-format protocol (identity / bf16 / int8+scales)
+  CollectiveBackend       collective protocol (jax / hierarchical / ringsim)
+  DistributedOptimizer    Horovod-style wrapper; exchange=ExchangeConfig(...)
 """
 from repro.core.indexed_slices import IndexedSlices, concat_slices, is_indexed_slices
 from repro.core.accumulation import (accumulate_gradients, densify,
                                      dense_to_slices, accumulated_nbytes)
+from repro.core.codecs import (WireCodec, available_codecs, get_codec,
+                               register_codec)
+from repro.core.backend import (CollectiveBackend, available_backends,
+                                get_backend, register_backend)
 from repro.core.exchange import (ExchangeConfig, ExchangePlan, compile_plan,
                                  plan_cache_info, clear_plan_cache)
 from repro.core.dist_opt import DistributedOptimizer, ExchangeStats
-from repro.core import comm, exchange, fusion
+from repro.core import backend, codecs, comm, exchange, fusion

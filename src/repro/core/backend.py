@@ -1,0 +1,371 @@
+"""CollectiveBackend — pluggable collective implementations.
+
+The ExchangePlan decides *what* moves (buckets, codecs, collective
+kinds); a ``CollectiveBackend`` decides *how*: which primitive each
+bucket collective lowers to, and what it costs on the wire.  Previously
+the jax.lax calls were hardcoded in ``core/comm.py`` and the
+"hierarchical" two-level psum was a boolean on the config; backends make
+the choice a registered, named object so NCCL/Gloo-style process-group
+backends can slot in without touching the planner.
+
+Backends implement four collectives over *packed 1-D buckets* —
+``all_reduce`` / ``reduce_scatter`` / ``all_gather`` / ``broadcast`` —
+plus the static wire/HLO accounting the dry-run audit and benchmarks
+consume.  All reductions return SUMS; averaging stays with the caller.
+
+Shipped backends:
+
+  * ``jax``           — flat collectives over the product of the mesh
+                        axes (today's ``comm.py`` calls);
+  * ``hierarchical``  — one psum per mesh axis, innermost first
+                        (two-level allreduce over ``("pod", "data")``);
+  * ``ringsim``       — host-side simulation of ring chunking via
+                        ``jax.lax.ppermute``: a bucket allreduce lowers
+                        to the literal 2(P-1) chunk hops of a ring
+                        allreduce, so HLO audits and benchmarks see the
+                        per-hop traffic an MPI/NCCL ring would move.
+
+Registry: ``register_backend`` / ``get_backend`` / ``available_backends``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import comm
+from repro.core.codecs import WireCodec, dtype_bytes, padded_elems
+
+#: collective kinds a bucket can be scheduled onto (shared with the
+#: planner; ``exchange.py`` re-exports them)
+ALLREDUCE = "allreduce"
+REDUCE_SCATTER = "reduce_scatter"       # psum_scatter + tiled allgather
+ALLGATHER = "allgather"                 # sparse gather buckets only
+
+
+def _prod(levels: Sequence[int]) -> int:
+    return int(math.prod(levels))
+
+
+class CollectiveBackend:
+    """Protocol for collective implementations.  Subclass + register."""
+
+    name: str = "abstract"
+
+    # -- runtime collectives (under shard_map, axes bound) ------------------
+    def all_reduce(self, x: jax.Array, axes: Tuple[str, ...]) -> jax.Array:
+        raise NotImplementedError
+
+    def reduce_scatter(self, x: jax.Array,
+                       axes: Tuple[str, ...]) -> jax.Array:
+        """Tiled over dim 0; caller pads ``x`` to a multiple of P."""
+        raise NotImplementedError
+
+    def all_gather(self, x: jax.Array, axes: Tuple[str, ...]) -> jax.Array:
+        """Tiled concatenation over dim 0 (worker order)."""
+        raise NotImplementedError
+
+    def broadcast(self, x: jax.Array, axes: Tuple[str, ...],
+                  root: int = 0) -> jax.Array:
+        """Every worker receives worker ``root``'s value (mask + sum —
+        the standard collective-free lowering of broadcast)."""
+        if not axes:
+            return x
+        flat = None
+        for a in axes:
+            idx = jax.lax.axis_index(a)
+            flat = idx if flat is None else flat * comm.axis_size(a) + idx
+        masked = jnp.where(flat == root, x, jnp.zeros_like(x))
+        return self.all_reduce(masked, axes)
+
+    # -- static wire accounting (per packed bucket, per worker) -------------
+    def dense_wire_bytes(self, kind: str, n_elems: int, native_dtype,
+                         codec: WireCodec,
+                         levels: Sequence[int]) -> int:
+        """Bytes this backend moves per worker for one dense bucket."""
+        p = _prod(levels)
+        if p <= 1:
+            return 0
+        if not codec.linear:
+            # non-linear codecs exchange via allgather of (values, scales)
+            return self.gather_wire_bytes(
+                codec.wire_bytes(n_elems, native_dtype), levels)
+        dt = codec.wire_dtype(native_dtype)
+        if kind == ALLREDUCE:
+            return self.allreduce_wire_bytes(n_elems, dt, levels)
+        if kind == REDUCE_SCATTER:
+            return self.rs_ag_wire_bytes(n_elems, dt, levels)
+        raise ValueError(f"unknown dense collective kind {kind!r}")
+
+    def gather_wire_bytes(self, payload_bytes: int,
+                          levels: Sequence[int]) -> int:
+        """Allgather of an opaque payload: every worker receives the
+        other P-1 workers' payloads (backend-invariant total)."""
+        return (_prod(levels) - 1) * payload_bytes
+
+    def allreduce_wire_bytes(self, n_elems: int, wire_dtype,
+                             levels: Sequence[int]) -> int:
+        raise NotImplementedError
+
+    def rs_ag_wire_bytes(self, n_elems: int, wire_dtype,
+                         levels: Sequence[int]) -> int:
+        raise NotImplementedError
+
+    # -- static HLO-launch accounting (the dry-run audit contract) ----------
+    def hlo_ops_dense(self, kind: str, codec: WireCodec,
+                      levels: Sequence[int]) -> int:
+        """Collective ops lowered per dense bucket."""
+        raise NotImplementedError
+
+    def hlo_ops_gather(self, n_tensors: int, levels: Sequence[int]) -> int:
+        """Collective ops lowered per sparse gather bucket exchanging
+        ``n_tensors`` arrays (indices + values [+ scales])."""
+        raise NotImplementedError
+
+    def logical_collectives(self, kind: str, n_levels: int = 1) -> int:
+        """P-independent logical launch count (plan.n_collectives)."""
+        raise NotImplementedError
+
+    @staticmethod
+    def _gather_factor(levels: Sequence[int]) -> float:
+        """wire/result-bytes ratio for tiled allgathers performed one
+        mesh axis at a time, innermost first: results telescope
+        (n·p_L, n·p_L·p_{L-1}, …) while the wire moves (P-1)·n total,
+        so the factor is (P-1) / Σ_k (prefix product of innermost k
+        sizes).  Collapses to (P-1)/P on one axis."""
+        p = _prod(levels)
+        denom, c = 0, 1
+        for size in reversed(tuple(levels)):
+            c *= size
+            denom += c
+        return (p - 1) / denom if denom else 0.0
+
+    def hlo_wire_estimate(self, coll_bytes: Dict[str, float],
+                          levels: Sequence[int]) -> float:
+        """Ring-model wire bytes implied by HLO collective RESULT bytes
+        (what ``analyze_collectives`` reports) under this backend."""
+        p = _prod(levels)
+        ar = 2 * (p - 1) / p * coll_bytes.get("all-reduce", 0.0)
+        ag = self._gather_factor(levels) * coll_bytes.get("all-gather", 0.0)
+        rs = (p - 1) * coll_bytes.get("reduce-scatter", 0.0)
+        cp = coll_bytes.get("collective-permute", 0.0)
+        return ar + ag + rs + cp
+
+    def __repr__(self):
+        return f"{type(self).__name__}({self.name!r})"
+
+
+class JaxCollectives(CollectiveBackend):
+    """Default backend: flat jax.lax collectives over the product of the
+    mesh axes (exactly the calls ``comm.py`` exposed)."""
+
+    name = "jax"
+
+    def all_reduce(self, x, axes):
+        return comm.all_reduce_dense(x, axes, average=False)
+
+    def reduce_scatter(self, x, axes):
+        return jax.lax.psum_scatter(x, axes if len(axes) > 1 else axes[0],
+                                    scatter_dimension=0, tiled=True)
+
+    def all_gather(self, x, axes):
+        return comm.all_gather_dense(x, axes)
+
+    def allreduce_wire_bytes(self, n_elems, wire_dtype, levels):
+        return comm.allreduce_wire_bytes((n_elems,), wire_dtype,
+                                         _prod(levels))
+
+    def rs_ag_wire_bytes(self, n_elems, wire_dtype, levels):
+        p = _prod(levels)
+        return (comm.reduce_scatter_wire_bytes(n_elems, wire_dtype, p)
+                + comm.allgather_dense_wire_bytes(n_elems, wire_dtype, p))
+
+    def hlo_ops_dense(self, kind, codec, levels):
+        if not codec.linear:               # values + scales allgathers
+            return 2 * len(levels)
+        return {ALLREDUCE: 1, REDUCE_SCATTER: 1 + len(levels)}[kind]
+
+    def hlo_ops_gather(self, n_tensors, levels):
+        return n_tensors * len(levels)     # one all-gather per axis each
+
+    def logical_collectives(self, kind, n_levels=1):
+        return {ALLREDUCE: 1, REDUCE_SCATTER: 2, ALLGATHER: 1}[kind]
+
+
+class HierarchicalBackend(JaxCollectives):
+    """Two-level (per-mesh-axis) collectives: one psum per axis,
+    innermost first — within-pod rings then cross-pod rings instead of
+    one flat ring spanning the slow inter-pod links."""
+
+    name = "hierarchical"
+
+    def all_reduce(self, x, axes):
+        return comm.two_level_all_reduce(x, axes, average=False)
+
+    def reduce_scatter(self, x, axes):
+        raise ValueError("hierarchical backend does not implement "
+                         "reduce_scatter; use backend='jax' (flat "
+                         "psum_scatter) for the RS+AG decomposition")
+
+    def allreduce_wire_bytes(self, n_elems, wire_dtype, levels):
+        return comm.hierarchical_allreduce_wire_bytes(
+            (n_elems,), wire_dtype, levels)
+
+    def rs_ag_wire_bytes(self, n_elems, wire_dtype, levels):
+        raise ValueError("hierarchical backend has no RS+AG path")
+
+    def hlo_ops_dense(self, kind, codec, levels):
+        if not codec.linear:
+            return 2 * len(levels)
+        if kind == ALLREDUCE:
+            return len(levels)             # one psum per axis
+        raise ValueError("hierarchical backend has no RS+AG path")
+
+    def logical_collectives(self, kind, n_levels=1):
+        if kind == ALLREDUCE:
+            return n_levels
+        return super().logical_collectives(kind, n_levels)
+
+    def hlo_wire_estimate(self, coll_bytes, levels):
+        # L equal-sized psums per buffer: split the aggregate all-reduce
+        # result bytes evenly across levels, each billed at its own ring
+        out = 0.0
+        ar_total = coll_bytes.get("all-reduce", 0.0) / max(len(levels), 1)
+        for p in levels:
+            if p > 1:
+                out += 2 * (p - 1) / p * ar_total
+        out += self._gather_factor(levels) * coll_bytes.get("all-gather",
+                                                            0.0)
+        out += coll_bytes.get("collective-permute", 0.0)
+        return out
+
+
+class RingSimBackend(CollectiveBackend):
+    """Host-side ring simulation over ``jax.lax.ppermute``.
+
+    A bucket allreduce lowers to the literal ring schedule: P-1
+    reduce-scatter hops followed by P-1 allgather hops, each moving one
+    1/P chunk — so the compiled HLO contains 2(P-1) collective-permutes
+    whose result bytes sum to exactly the ring-allreduce wire formula.
+    Useful for auditing/benchmarking per-hop traffic parity with MPI and
+    NCCL ring implementations; single mesh axis only.
+    """
+
+    name = "ringsim"
+
+    @staticmethod
+    def _ring(axes: Tuple[str, ...]):
+        if len(axes) != 1:
+            raise ValueError("ringsim backend runs over exactly one mesh "
+                             f"axis, got {axes!r}")
+        ax = axes[0]
+        p = comm.axis_size(ax)
+        perm = [(i, (i + 1) % p) for i in range(p)]
+        return ax, p, perm
+
+    def _rs_phase(self, x, ax, p, perm, start_offset: int):
+        """P-1 hops; worker r ends holding the full sum of chunk
+        ``(r + start_offset - (p-1)) % p``."""
+        n = x.shape[0]
+        chunk = -(-n // p)
+        xp = (jnp.pad(x, (0, p * chunk - n)) if p * chunk != n
+              else x).reshape(p, chunk)
+        r = jax.lax.axis_index(ax)
+        cur = xp[(r + start_offset) % p]
+        for s in range(1, p):
+            cur = jax.lax.ppermute(cur, ax, perm)
+            cur = cur + xp[(r + start_offset - s) % p]
+        return xp, cur, r
+
+    def all_reduce(self, x, axes):
+        ax, p, perm = self._ring(axes)
+        if p == 1:
+            return x
+        n = x.shape[0]
+        xp, cur, r = self._rs_phase(x, ax, p, perm, start_offset=0)
+        # worker r now owns chunk (r+1) % p; circulate all chunks back
+        out = jnp.zeros_like(xp).at[(r + 1) % p].set(cur)
+        for s in range(1, p):
+            cur = jax.lax.ppermute(cur, ax, perm)
+            out = out.at[(r + 1 - s) % p].set(cur)
+        return out.reshape(-1)[:n]
+
+    def reduce_scatter(self, x, axes):
+        ax, p, perm = self._ring(axes)
+        if p == 1:
+            return x
+        # start at r-1 so worker r ends owning chunk r (psum_scatter order)
+        _, cur, _ = self._rs_phase(x, ax, p, perm, start_offset=-1)
+        return cur
+
+    def all_gather(self, x, axes):
+        ax, p, perm = self._ring(axes)
+        if p == 1:
+            return x
+        r = jax.lax.axis_index(ax)
+        parts = jnp.zeros((p,) + x.shape, x.dtype).at[r].set(x)
+        cur = x
+        for s in range(1, p):
+            cur = jax.lax.ppermute(cur, ax, perm)
+            parts = parts.at[(r - s) % p].set(cur)
+        return parts.reshape((p * x.shape[0],) + x.shape[1:])
+
+    # -- accounting: explicit per-hop chunk traffic -------------------------
+    def allreduce_wire_bytes(self, n_elems, wire_dtype, levels):
+        p = _prod(levels)
+        if p <= 1:
+            return 0
+        chunk = padded_elems(n_elems, p) // p
+        return int(2 * (p - 1) * chunk * dtype_bytes(wire_dtype))
+
+    def rs_ag_wire_bytes(self, n_elems, wire_dtype, levels):
+        # the ring IS the RS+AG decomposition; same hops either way
+        return self.allreduce_wire_bytes(n_elems, wire_dtype, levels)
+
+    def hlo_ops_dense(self, kind, codec, levels):
+        p = _prod(levels)
+        if not codec.linear:
+            return 2 * max(p - 1, 0)       # ring gathers: values + scales
+        return 2 * max(p - 1, 0)           # RS hops + AG hops
+
+    def hlo_ops_gather(self, n_tensors, levels):
+        return n_tensors * max(_prod(levels) - 1, 0)
+
+    def logical_collectives(self, kind, n_levels=1):
+        return {ALLREDUCE: 1, REDUCE_SCATTER: 2, ALLGATHER: 1}[kind]
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_BACKENDS: Dict[str, CollectiveBackend] = {}
+
+
+def register_backend(backend: CollectiveBackend,
+                     name: Optional[str] = None) -> None:
+    """Extension point: NCCL/Gloo-style process-group backends register
+    here and become addressable as ``ExchangeConfig(backend=<name>)``."""
+    _BACKENDS[name or backend.name] = backend
+
+
+register_backend(JaxCollectives())
+register_backend(HierarchicalBackend())
+register_backend(RingSimBackend())
+
+
+def available_backends() -> Tuple[str, ...]:
+    return tuple(sorted(_BACKENDS))
+
+
+def get_backend(name) -> CollectiveBackend:
+    if isinstance(name, CollectiveBackend):
+        return name
+    if name is None:
+        return _BACKENDS["jax"]
+    if name not in _BACKENDS:
+        raise ValueError(f"unknown collective backend {name!r} "
+                         f"(registered: {', '.join(available_backends())})")
+    return _BACKENDS[name]

@@ -1,0 +1,243 @@
+"""WireCodec — pluggable gradient wire formats.
+
+The paper's result is that the *representation* of the accumulated
+gradient decides scale-out behaviour; Ott et al. (Scaling NMT) showed
+the next win is narrowing the wire itself (fp16), and quantised wires
+(int8 + scales) halve it again.  Previously the wire format was a single
+``wire_dtype`` flag threaded through ``ExchangeConfig`` and hand-rolled
+casts inside ``ExchangePlan``; this module makes it a protocol:
+
+    encode(buf)            -> (wire values, optional side scales)
+    decode(wire, scale, …) -> buf in the native dtype
+    wire_bytes(n_elems)    -> exact encoded payload size
+
+with a registry so new codecs (fp8, blockwise int4, …) slot in by name.
+
+Codecs come in two families the scheduler must distinguish:
+
+  * **linear** codecs (identity, bf16/f16 casts): the encoded buffer can
+    be summed *by the collective itself* (``psum`` of a bf16 buffer) —
+    encode/decode fuse into pack/unpack;
+  * **non-linear** codecs (int8 + per-bucket absmax scale): workers
+    quantise against *their own* scale, so the wire cannot be reduced
+    in-flight.  The plan exchanges these via allgather of (values,
+    scales) and performs the reduction after decode — exactly how
+    compressed-gradient allreduce is implemented in practice.
+
+``Int8Codec`` stores one f32 absmax scale per bucket (the "tiny
+side-tensor"); quantisation runs through the fused Pallas kernel
+(``repro.kernels.ops.quantize_int8``) when ``use_kernel`` is set, else a
+pure-jax path.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+_DTYPE_ALIASES = {"bf16": "bfloat16", "f32": "float32", "fp32": "float32",
+                  "f16": "float16", "fp16": "float16"}
+
+
+def canonical_dtype(name) -> Optional[str]:
+    """Normalise a dtype spec ('bf16', jnp.bfloat16, ...) to its canonical
+    numpy name, or None."""
+    if name is None:
+        return None
+    if isinstance(name, str) and name in _DTYPE_ALIASES:
+        name = _DTYPE_ALIASES[name]
+    try:
+        return jnp.dtype(name).name
+    except TypeError as e:
+        raise ValueError(f"unknown wire dtype {name!r} (try 'bf16', "
+                         f"'f16', or any numpy dtype name)") from e
+
+
+def dtype_bytes(dtype) -> int:
+    return jnp.dtype(dtype).itemsize
+
+
+class WireCodec:
+    """Protocol for wire formats.  Subclass and ``register_codec``."""
+
+    #: registry name
+    name: str = "abstract"
+    #: True when the encoded buffer may be summed by the collective
+    #: directly (cast-style codecs); False forces the allgather+decode
+    #: reduction path (quantised codecs)
+    linear: bool = True
+    #: bytes of side-tensor (scales) per encoded buffer
+    scale_bytes: int = 0
+
+    def wire_dtype(self, native_dtype: str) -> str:
+        """Dtype of the encoded values buffer."""
+        raise NotImplementedError
+
+    def encode(self, buf: jax.Array, use_kernel: bool = False
+               ) -> Tuple[jax.Array, Optional[jax.Array]]:
+        """buf -> (wire values, side scales or None)."""
+        raise NotImplementedError
+
+    def decode(self, wire: jax.Array, scale: Optional[jax.Array],
+               native_dtype) -> jax.Array:
+        """Invert ``encode`` back to ``native_dtype``."""
+        raise NotImplementedError
+
+    def wire_bytes(self, n_elems: int, native_dtype="float32") -> int:
+        """Exact payload bytes (values + side scales) for ``n_elems``."""
+        return (n_elems * dtype_bytes(self.wire_dtype(native_dtype))
+                + self.scale_bytes)
+
+    def __repr__(self):
+        return f"{type(self).__name__}({self.name!r})"
+
+
+class IdentityCodec(WireCodec):
+    """No-op wire: native dtype straight onto the collective."""
+
+    name = "identity"
+    linear = True
+
+    def wire_dtype(self, native_dtype: str) -> str:
+        return jnp.dtype(native_dtype).name
+
+    def encode(self, buf, use_kernel: bool = False):
+        return buf, None
+
+    def decode(self, wire, scale, native_dtype):
+        return wire.astype(native_dtype)
+
+
+class CastCodec(WireCodec):
+    """Downcast-on-encode / upcast-on-decode (Ott et al. 2018 fp16 wire).
+
+    This is the bf16 wire previously hardcoded into pack/unpack,
+    extracted behind the protocol.
+    """
+
+    linear = True
+
+    def __init__(self, target_dtype, name: Optional[str] = None):
+        self.target = canonical_dtype(target_dtype)
+        self.name = name or self.target
+
+    def wire_dtype(self, native_dtype: str) -> str:
+        return self.target
+
+    def encode(self, buf, use_kernel: bool = False):
+        return buf.astype(self.target), None
+
+    def decode(self, wire, scale, native_dtype):
+        return wire.astype(native_dtype)
+
+
+class Int8Codec(WireCodec):
+    """int8 values + one f32 absmax scale per buffer.
+
+    ``q = clip(round(x / scale), -127, 127)`` with
+    ``scale = absmax(x) / 127`` — the worst-case round-trip error is
+    bounded by ``scale / 2`` per element.  Non-linear: each worker's
+    scale differs, so the exchange allgathers (values, scales) and sums
+    after decode.
+    """
+
+    name = "int8"
+    linear = False
+    scale_bytes = 4          # one f32 scale per bucket
+    QMAX = 127.0
+
+    def wire_dtype(self, native_dtype: str) -> str:
+        return "int8"
+
+    def encode(self, buf, use_kernel: bool = False):
+        from repro.kernels import ops as kernel_ops
+        flat = buf.reshape(-1)
+        q, scale = kernel_ops.quantize_int8(
+            flat, impl="pallas" if use_kernel else "xla")
+        return q.reshape(buf.shape), scale
+
+    def decode(self, wire, scale, native_dtype):
+        out = wire.astype(jnp.float32) * scale.astype(jnp.float32)
+        return out.astype(native_dtype)
+
+    def max_error(self, buf) -> float:
+        """Per-element round-trip bound for a concrete buffer (tests)."""
+        absmax = float(jnp.max(jnp.abs(buf)))
+        return absmax / self.QMAX / 2 + 1e-12
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_CODECS: Dict[str, WireCodec] = {}
+
+
+def register_codec(codec: WireCodec, name: Optional[str] = None) -> None:
+    _CODECS[name or codec.name] = codec
+
+
+register_codec(IdentityCodec())
+register_codec(CastCodec("bfloat16", name="bf16"))
+register_codec(CastCodec("float16", name="f16"))
+register_codec(Int8Codec())
+
+
+def available_codecs() -> Tuple[str, ...]:
+    return tuple(sorted(_CODECS))
+
+
+def get_codec(name) -> WireCodec:
+    """Resolve a codec by registry name.
+
+    Dtype-ish names ('bfloat16', 'float16', ...) resolve to a CastCodec
+    so the deprecated ``wire_dtype=`` shim keeps accepting any numpy
+    dtype name.
+    """
+    if isinstance(name, WireCodec):
+        return name
+    if name is None:
+        return _CODECS["identity"]
+    if name in _CODECS:
+        return _CODECS[name]
+    dt = canonical_dtype(name)       # raises ValueError on garbage
+    if dt in _CODECS:
+        return _CODECS[dt]
+    for c in _CODECS.values():
+        if isinstance(c, CastCodec) and c.target == dt:
+            return c
+    codec = (IdentityCodec() if dt == "float32" else CastCodec(dt))
+    register_codec(codec, name=dt)
+    return codec
+
+
+def codec_name_for_wire_dtype(wire_dtype) -> str:
+    """Map the deprecated ``wire_dtype`` flag onto a codec name."""
+    dt = canonical_dtype(wire_dtype)
+    if dt is None or dt == "float32":
+        return "identity"
+    for name, c in _CODECS.items():
+        if isinstance(c, CastCodec) and c.target == dt:
+            return name
+    get_codec(dt)
+    return dt
+
+
+def sum_decoded(codec: WireCodec, gathered_wire: jax.Array,
+                gathered_scales: Optional[jax.Array], n_chunks: int,
+                native_dtype) -> jax.Array:
+    """Decode ``n_chunks`` per-worker payloads (stacked on axis 0 of a
+    flat gathered buffer) and sum them — the post-gather reduction for
+    non-linear codecs.  Accumulates in f32 regardless of wire dtype."""
+    chunks = gathered_wire.reshape((n_chunks, -1)).astype(jnp.float32)
+    if gathered_scales is not None:
+        chunks = chunks * gathered_scales.reshape(
+            (n_chunks, 1)).astype(jnp.float32)
+    return jnp.sum(chunks, axis=0).astype(native_dtype)
+
+
+def padded_elems(n_elems: int, n_workers: int) -> int:
+    """Round ``n_elems`` up to a multiple of ``n_workers`` (tiled
+    reduce-scatter / ring-chunking padding)."""
+    return -(-n_elems // max(n_workers, 1)) * max(n_workers, 1)

@@ -25,6 +25,7 @@ from typing import Optional, Sequence, Tuple, Union
 import jax
 import jax.numpy as jnp
 
+from repro.core.codecs import dtype_bytes  # noqa: F401  (canonical home)
 from repro.core.indexed_slices import IndexedSlices
 
 AxisNames = Union[None, str, Sequence[str]]
@@ -132,11 +133,9 @@ def all_gather_slices(s: IndexedSlices, axis_name: AxisNames) -> IndexedSlices:
 
 # ---------------------------------------------------------------------------
 # Wire-size accounting (static; used by benchmarks + roofline)
+# ``dtype_bytes`` lives in repro.core.codecs (re-exported above) so the
+# codec payload math and these collective formulas share one definition.
 # ---------------------------------------------------------------------------
-
-def dtype_bytes(dtype) -> int:
-    return jnp.dtype(dtype).itemsize
-
 
 def allreduce_wire_bytes(shape: Sequence[int], dtype, n_workers: int,
                          algorithm: str = "ring") -> int:

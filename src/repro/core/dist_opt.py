@@ -10,27 +10,39 @@ structure:
      ``sparse_as_dense`` Listing-1 pre-pass as the paper's shipped fix);
   2. buckets dense leaves into Horovod-style fusion buffers and sparse
      IndexedSlices leaves into gather buckets;
-  3. schedules one collective per bucket — allgather for IndexedSlices
-     (pathological), fused allreduce for dense (the fix), optionally the
-     reduce-scatter+allgather decomposition or a hierarchical two-level
-     psum — with an optional bf16 ``wire_dtype``.
+  3. schedules one collective per bucket, lowered through the
+     configured ``CollectiveBackend`` (flat jax, hierarchical per-axis
+     psum, ppermute ring simulation) with the configured ``WireCodec``
+     (identity / bf16 / int8 + scales) on the wire.
 
-The Horovod call
+All exchange behaviour lives in ONE composable config object:
 
-    opt = hvd.DistributedOptimizer(opt, sparse_as_dense=True)
+    opt = DistributedOptimizer(
+        base, exchange=ExchangeConfig(sparse_as_dense=True, codec="int8",
+                                      backend="hierarchical"),
+        axis_name=("pod", "data"))
 
-becomes
-
-    opt = DistributedOptimizer(opt, sparse_as_dense=True,
-                               axis_name=("pod", "data"))
+The historical flag soup (``sparse_as_dense=``, ``reduce_scatter=``,
+``wire_dtype=``, ``use_kernel=``, ``fusion_threshold=``, …) is still
+accepted, emits a ``DeprecationWarning``, and forwards into an
+equivalent ``ExchangeConfig`` — old- and new-style construction produce
+identical (cache-shared) plans.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional, Union
 
 from repro.core import comm, exchange
+from repro.core.exchange import ExchangeConfig
 from repro.optim.base import Optimizer
+
+#: ExchangeConfig fields accepted as deprecated DistributedOptimizer
+#: kwargs (the pre-protocol flag soup)
+_DEPRECATED_FLAGS = ("sparse_as_dense", "algorithm", "fusion_threshold",
+                     "use_kernel", "reduce_scatter", "wire_dtype",
+                     "hierarchical", "hierarchy_levels")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,7 +50,9 @@ class ExchangeStats:
     """Static per-step accounting, for benchmarks and EXPERIMENTS.md.
 
     Derived entirely from the ExchangePlan — the same numbers the
-    runtime collectives move.
+    runtime collectives move.  ``strategy`` names the accumulation rule
+    AND the active codec/backend, so benchmark CSVs distinguish bf16
+    from int8 runs and flat from hierarchical/ring exchanges.
     """
     accumulated_bytes: int       # size of accumulated representation
     wire_bytes: int              # bytes moved by the collective (per worker)
@@ -46,20 +60,36 @@ class ExchangeStats:
     strategy: str
 
 
-@dataclasses.dataclass(frozen=True)
 class DistributedOptimizer:
     """Drop-in wrapper around an Optimizer adding distributed exchange."""
 
-    base: Optimizer
-    sparse_as_dense: bool = False
-    algorithm: str = "tf_algorithm1"       # paper Alg. 1 by default (TF)
-    axis_name: comm.AxisNames = None       # data-parallel mesh axes
-    average: bool = True
-    fusion_threshold: Optional[int] = None  # bytes; None disables fusion
-    use_kernel: bool = False                # Pallas densify kernel
-    reduce_scatter: bool = False            # ZeRO-style RS+AG collective
-    wire_dtype: Optional[str] = None        # e.g. "bfloat16" wire compression
-    hierarchical: bool = False              # two-level psum per mesh axis
+    def __init__(self, base: Optimizer,
+                 exchange_config: Optional[ExchangeConfig] = None, *,
+                 exchange: Optional[ExchangeConfig] = None,
+                 axis_name: comm.AxisNames = None,
+                 average: bool = True,
+                 **deprecated):
+        self.base = base
+        self.axis_name = axis_name
+        self.average = average
+        cfg = exchange if exchange is not None else exchange_config
+        unknown = set(deprecated) - set(_DEPRECATED_FLAGS)
+        if unknown:
+            raise TypeError(f"DistributedOptimizer got unexpected keyword "
+                            f"arguments {sorted(unknown)}")
+        flags = {k: v for k, v in deprecated.items() if v is not None}
+        if flags:
+            if cfg is not None:
+                raise TypeError(
+                    f"pass either exchange=ExchangeConfig(...) or the "
+                    f"deprecated flags {sorted(flags)}, not both")
+            warnings.warn(
+                f"DistributedOptimizer({', '.join(sorted(flags))}=...) "
+                f"flags are deprecated; pass "
+                f"exchange=ExchangeConfig(...) instead",
+                DeprecationWarning, stacklevel=2)
+            cfg = ExchangeConfig(**flags)
+        self._exchange_config = cfg if cfg is not None else ExchangeConfig()
 
     # -- optimizer API -------------------------------------------------------
     def init(self, params):
@@ -71,19 +101,21 @@ class DistributedOptimizer:
 
     # -- the plan ------------------------------------------------------------
     @property
-    def exchange_config(self) -> exchange.ExchangeConfig:
-        return exchange.ExchangeConfig(
-            algorithm=self.algorithm,
-            sparse_as_dense=self.sparse_as_dense,
-            fusion_threshold=self.fusion_threshold,
-            reduce_scatter=self.reduce_scatter,
-            hierarchical=self.hierarchical,
-            wire_dtype=self.wire_dtype,
-            use_kernel=self.use_kernel)
+    def exchange_config(self) -> ExchangeConfig:
+        return self._exchange_config
+
+    # convenience read-throughs for code written against the old flags
+    @property
+    def sparse_as_dense(self) -> bool:
+        return self._exchange_config.sparse_as_dense
+
+    @property
+    def algorithm(self) -> str:
+        return self._exchange_config.algorithm
 
     def plan(self, grads) -> exchange.ExchangePlan:
         """The (cached) static schedule for this gradient tree."""
-        return exchange.compile_plan(grads, self.exchange_config)
+        return exchange.compile_plan(grads, self._exchange_config)
 
     # -- the paper's mechanism, now plan-driven ------------------------------
     def accumulate(self, grads):
@@ -97,18 +129,24 @@ class DistributedOptimizer:
         return self.plan(grads).execute(grads, self.axis_name,
                                         average=self.average)
 
+    def broadcast(self, tree, root: int = 0):
+        """Broadcast a (dense) pytree from worker ``root`` through the
+        plan's bucketing — serving-side weight hot-swap."""
+        return self.plan(tree).broadcast(tree, self.axis_name, root=root)
+
     # -- static accounting (no devices needed) -------------------------------
     def exchange_stats(self, grads,
                        n_workers: Union[int, tuple]) -> ExchangeStats:
         plan = self.plan(grads)
-        strategy = ("dense_reduce" if self.sparse_as_dense
-                    else f"{self.algorithm}")
-        if self.reduce_scatter:
+        cfg = plan.config
+        strategy = ("dense_reduce" if cfg.sparse_as_dense
+                    else f"{cfg.algorithm}")
+        if cfg.reduce_scatter:
             strategy += "+reduce_scatter"
-        if self.hierarchical:
-            strategy += "+hierarchical"
-        if plan.config.wire_dtype is not None:
-            strategy += f"+wire:{plan.config.wire_dtype}"
+        if cfg.codec != "identity":
+            strategy += f"+codec:{cfg.codec}"
+        if cfg.backend != "jax":
+            strategy += f"+backend:{cfg.backend}"
         return ExchangeStats(
             accumulated_bytes=plan.buffer_bytes(n_workers),
             wire_bytes=plan.wire_bytes(n_workers),

@@ -17,14 +17,18 @@ compiles the whole decision ONCE per gradient-tree structure:
      (first-fit-decreasing) and sparse IndexedSlices leaves into their
      own gather buckets;
   3. **select a collective** per bucket — fused allreduce,
-     reduce-scatter + allgather (ZeRO-style decomposition), allgather
-     (the pathological sparse path), or a hierarchical two-level psum
-     over ``("pod", "data")`` mesh axes;
-  4. optionally run the wire in a narrower ``wire_dtype`` (bf16):
-     downcast on pack, upcast on unpack (Ott et al. 2018), with
-     densification (XLA scatter-add or the Pallas kernel) FUSED into
-     packing so deferred-sparse leaves never materialise a dense f32
-     tensor before the cast.
+     reduce-scatter + allgather (ZeRO-style decomposition), or allgather
+     (the pathological sparse path);
+  4. run the wire through a registered **WireCodec**
+     (``repro.core.codecs``): identity, bf16/f16 casts (Ott et al.
+     2018), or int8 + per-bucket absmax scales — with densification (XLA
+     scatter-add or the Pallas kernel) FUSED into packing so
+     deferred-sparse leaves never materialise a dense f32 tensor before
+     the narrowing;
+  5. lower every bucket collective through a registered
+     **CollectiveBackend** (``repro.core.backend``): flat jax
+     collectives, the hierarchical per-mesh-axis psum, or the
+     ppermute-based ring simulation.
 
 The plan is cached on (treedef, contribution shapes/dtypes, config) and
 is the single source of truth for ``wire_bytes`` / ``buffer_bytes`` /
@@ -40,67 +44,91 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 import jax
 import jax.numpy as jnp
 
-from repro.core import accumulation, comm, fusion
+from repro.core import accumulation, backend as backend_lib, codecs, comm, \
+    fusion
+from repro.core.backend import ALLGATHER, ALLREDUCE, REDUCE_SCATTER
+from repro.core.codecs import canonical_dtype
 from repro.core.indexed_slices import IndexedSlices, concat_slices
 
 # ---------------------------------------------------------------------------
 # Configuration
 # ---------------------------------------------------------------------------
 
-#: collective kinds a dense bucket can be scheduled onto
-ALLREDUCE = "allreduce"
-REDUCE_SCATTER = "reduce_scatter"       # psum_scatter + tiled allgather
-HIERARCHICAL = "hierarchical"           # one psum per mesh axis
-ALLGATHER = "allgather"                 # sparse gather buckets only
-
-#: HLO collectives emitted per bucket, per kind (the dry-run audit
-#: checks lowered HLO against exactly these counts); hierarchical
-#: buckets emit ``config.hierarchy_levels`` psums instead
-COLLECTIVES_PER_BUCKET = {ALLREDUCE: 1, REDUCE_SCATTER: 2, ALLGATHER: 1}
-
-
-def canonical_dtype(name) -> Optional[str]:
-    """Normalise a dtype spec ('bf16', jnp.bfloat16, ...) to its canonical
-    numpy name, or None."""
-    if name is None:
-        return None
-    aliases = {"bf16": "bfloat16", "f32": "float32", "fp32": "float32",
-               "f16": "float16", "fp16": "float16"}
-    if isinstance(name, str) and name in aliases:
-        name = aliases[name]
-    try:
-        return jnp.dtype(name).name
-    except TypeError as e:
-        raise ValueError(f"unknown wire_dtype {name!r} (try 'bf16', "
-                         f"'f16', or any numpy dtype name)") from e
-
 
 @dataclasses.dataclass(frozen=True)
 class ExchangeConfig:
-    """Everything the planner needs to know, all static."""
+    """Everything the planner needs to know, all static.
+
+    The single public entry point for exchange behaviour:
+
+        DistributedOptimizer(opt, exchange=ExchangeConfig(
+            codec="int8", backend="hierarchical", reduce_scatter=False))
+
+    ``codec`` / ``backend`` name entries in the ``repro.core.codecs`` /
+    ``repro.core.backend`` registries.  The legacy ``wire_dtype`` and
+    ``hierarchical`` fields are accepted as deprecated spellings and
+    normalised onto ``codec`` / ``backend`` in ``__post_init__`` (so
+    old- and new-style configs compare, hash, and cache identically).
+    """
     algorithm: str = "tf_algorithm1"     # paper Alg. 1 (TF upstream)
     sparse_as_dense: bool = False        # Horovod Listing-1 pre-pass
     fusion_threshold: Optional[int] = None   # bytes; None = bucket/leaf
     reduce_scatter: bool = False         # RS+AG instead of allreduce
-    hierarchical: bool = False           # one psum per mesh axis
+    codec: str = "identity"              # WireCodec registry name
+    backend: str = "jax"                 # CollectiveBackend registry name
     hierarchy_levels: int = 2            # mesh axes a hierarchical plan spans
-    wire_dtype: Optional[str] = None     # e.g. "bfloat16"; None = native
-    use_kernel: bool = False             # Pallas densify kernel
+    use_kernel: bool = False             # Pallas densify/quantize kernels
+    # -- deprecated spellings, folded into codec/backend ---------------------
+    wire_dtype: Optional[str] = None     # -> codec=<cast codec>
+    hierarchical: bool = False           # -> backend="hierarchical"
 
     def __post_init__(self):
         if self.algorithm not in ("tf_algorithm1", "proposed_algorithm2"):
             raise ValueError(
                 f"unknown accumulation algorithm: {self.algorithm}")
-        object.__setattr__(self, "wire_dtype",
-                           canonical_dtype(self.wire_dtype))
+        if self.wire_dtype is not None:
+            mapped = codecs.codec_name_for_wire_dtype(self.wire_dtype)
+            if self.codec not in ("identity", mapped):
+                raise ValueError(
+                    f"conflicting wire_dtype={self.wire_dtype!r} and "
+                    f"codec={self.codec!r}")
+            object.__setattr__(self, "codec", mapped)
+            object.__setattr__(self, "wire_dtype", None)
+        if self.hierarchical:
+            if self.backend not in ("jax", "hierarchical"):
+                raise ValueError(
+                    f"conflicting hierarchical=True and "
+                    f"backend={self.backend!r}")
+            object.__setattr__(self, "backend", "hierarchical")
+            object.__setattr__(self, "hierarchical", False)
+        # resolve + normalise registry names (raises on unknown ones)
+        object.__setattr__(self, "codec", codecs.get_codec(self.codec).name)
+        backend_lib.get_backend(self.backend)
+        if self.reduce_scatter:
+            if not self.codec_obj.linear:
+                raise ValueError(
+                    f"codec {self.codec!r} is non-linear (quantised wires "
+                    f"cannot be reduced in flight) and has no "
+                    f"reduce_scatter path; use the default allreduce")
+            if self.backend == "hierarchical":
+                raise ValueError("hierarchical backend has no RS+AG path; "
+                                 "use backend='jax' or 'ringsim'")
+
+    @property
+    def codec_obj(self) -> codecs.WireCodec:
+        return codecs.get_codec(self.codec)
+
+    @property
+    def backend_obj(self) -> backend_lib.CollectiveBackend:
+        return backend_lib.get_backend(self.backend)
+
+    @property
+    def is_hierarchical(self) -> bool:
+        return self.backend == "hierarchical"
 
     @property
     def dense_collective(self) -> str:
-        if self.reduce_scatter:
-            return REDUCE_SCATTER
-        if self.hierarchical:
-            return HIERARCHICAL
-        return ALLREDUCE
+        return REDUCE_SCATTER if self.reduce_scatter else ALLREDUCE
 
 
 # ---------------------------------------------------------------------------
@@ -286,48 +314,76 @@ class ExchangePlan:
 
     @property
     def n_collectives(self) -> int:
-        n = 0
-        for b in self.dense_buckets:
-            n += (self.config.hierarchy_levels
-                  if b.collective == HIERARCHICAL
-                  else COLLECTIVES_PER_BUCKET[b.collective])
-        return n + len(self.gather_leaf_ids) * COLLECTIVES_PER_BUCKET[
-            ALLGATHER]
+        """Logical collective launches (P-independent)."""
+        if not self.config.codec_obj.linear:
+            # non-linear codecs never reduce in flight: every bucket is
+            # one values allgather + one scales allgather, whatever its
+            # nominal kind or backend (same convention that bills RS+AG
+            # as 2)
+            return 2 * (len(self.dense_buckets)
+                        + len(self.gather_leaf_ids))
+        be = self.config.backend_obj
+        nl = self.config.hierarchy_levels
+        n = sum(be.logical_collectives(b.collective, nl)
+                for b in self.dense_buckets)
+        return n + len(self.gather_leaf_ids) * be.logical_collectives(
+            ALLGATHER, nl)
 
     def _wire_dtype_for(self, spec: LeafSpec) -> str:
-        return self.config.wire_dtype or spec.dtype
+        return self.config.codec_obj.wire_dtype(spec.dtype)
 
-    def wire_bytes(self, n_workers: Union[int, Sequence[int]]) -> int:
-        """Bytes moved per worker per step — the single source of truth
-        shared by the benchmarks, the roofline model and the dry-run
-        collective audit.  Hierarchical plans require ``n_workers`` as a
-        per-level tuple (e.g. ``(n_pods, workers_per_pod)``) matching
-        ``config.hierarchy_levels``."""
+    def _levels(self, n_workers: Union[int, Sequence[int]]
+                ) -> Tuple[int, ...]:
         levels = (tuple(n_workers) if not isinstance(n_workers, int)
                   else (n_workers,))
-        if self.config.hierarchical \
+        if self.config.is_hierarchical \
                 and len(levels) != self.config.hierarchy_levels:
             raise ValueError(
                 f"hierarchical plan with {self.config.hierarchy_levels} "
                 f"levels needs per-level worker counts, got {n_workers!r}")
-        p = math.prod(levels)
+        return levels
+
+    def _gather_payload_bytes(self, spec: SparseSpec) -> int:
+        """Per-worker encoded IndexedSlices payload (values in the wire
+        dtype + native-width indices + codec side scales)."""
+        codec = self.config.codec_obj
+        return (codec.wire_bytes(spec.rows * spec.row_elems, spec.dtype)
+                + spec.rows * comm.dtype_bytes(spec.index_dtype))
+
+    def wire_bytes(self, n_workers: Union[int, Sequence[int]]) -> int:
+        """Bytes moved per worker per step — the single source of truth
+        shared by the benchmarks, the roofline model and the dry-run
+        collective audit.  Delegates per bucket to the configured
+        backend's accounting with the configured codec's payload sizes.
+        Hierarchical plans require ``n_workers`` as a per-level tuple
+        (e.g. ``(n_pods, workers_per_pod)``) matching
+        ``config.hierarchy_levels``."""
+        levels = self._levels(n_workers)
+        be = self.config.backend_obj
+        codec = self.config.codec_obj
         total = 0
         for b in self.dense_buckets:
-            dt = b.wire_dtype
-            if b.collective == REDUCE_SCATTER:
-                total += comm.reduce_scatter_wire_bytes(b.n_elems, dt, p)
-                total += comm.allgather_dense_wire_bytes(b.n_elems, dt, p)
-            elif b.collective == HIERARCHICAL:
-                total += comm.hierarchical_allreduce_wire_bytes(
-                    (b.n_elems,), dt, levels)
-            else:
-                total += comm.allreduce_wire_bytes((b.n_elems,), dt, p)
+            total += be.dense_wire_bytes(b.collective, b.n_elems,
+                                         b.wire_dtype, codec, levels)
         for i in self.gather_leaf_ids:
-            s = self.leaf_specs[i]
-            total += comm.allgather_wire_bytes(
-                s.rows, s.row_elems, self._wire_dtype_for(s), p,
-                index_dtype=s.index_dtype)
+            total += be.gather_wire_bytes(
+                self._gather_payload_bytes(self.leaf_specs[i]), levels)
         return total
+
+    def hlo_collectives(self, n_workers: Union[int, Sequence[int]]) -> int:
+        """Exact collective-op count in the lowered HLO (the dry-run
+        audit contract): backends may lower one logical collective to
+        several ops (per-axis psums, ring ppermute hops) and one gather
+        bucket lowers to one all-gather per exchanged tensor (indices +
+        values [+ codec scales])."""
+        levels = self._levels(n_workers)
+        be = self.config.backend_obj
+        codec = self.config.codec_obj
+        n = sum(be.hlo_ops_dense(b.collective, codec, levels)
+                for b in self.dense_buckets)
+        n_tensors = 2 + (0 if codec.linear else 1)
+        return n + len(self.gather_leaf_ids) * be.hlo_ops_gather(
+            n_tensors, levels)
 
     def buffer_bytes(self, n_workers: Union[int, Sequence[int]]) -> int:
         """Size of the accumulated representation each worker holds after
@@ -335,14 +391,17 @@ class ExchangePlan:
         P, dense buffers are constant."""
         p = (n_workers if isinstance(n_workers, int)
              else math.prod(n_workers))
+        codec = self.config.codec_obj
         total = self.dense_bytes
         for i in self.gather_leaf_ids:
             s = self.leaf_specs[i]
-            # the gathered buffer holds WIRE-dtype values (execute casts
-            # before the allgather) plus native-width indices
+            # the gathered buffer holds WIRE-dtype values (execute
+            # encodes before the allgather) plus native-width indices
+            # and, for sided codecs, one scale per worker
             total += comm.gathered_buffer_bytes(
                 s.rows, s.row_elems, self._wire_dtype_for(s), p,
                 index_dtype=s.index_dtype)
+            total += p * codec.scale_bytes
         return total
 
     @property
@@ -365,16 +424,21 @@ class ExchangePlan:
         return total
 
     def describe(self) -> str:
-        """Human-readable bucket/collective table (docs + dry-run)."""
-        lines = ["| bucket | kind | collective | elems | wire dtype |",
-                 "|---|---|---|---|---|"]
+        """Human-readable bucket/collective table (docs + dry-run),
+        naming the active codec and backend per bucket so benchmark CSVs
+        distinguish bf16 from int8 runs."""
+        codec, be = self.config.codec, self.config.backend
+        lines = ["| bucket | kind | collective | codec | backend | elems "
+                 "| wire dtype |",
+                 "|---|---|---|---|---|---|---|"]
         for k, b in enumerate(self.dense_buckets):
             lines.append(f"| {k} | dense x{len(b.slots)} | {b.collective} "
-                         f"| {b.n_elems} | {b.wire_dtype} |")
+                         f"| {codec} | {be} | {b.n_elems} "
+                         f"| {b.wire_dtype} |")
         for k, i in enumerate(self.gather_leaf_ids):
             s = self.leaf_specs[i]
             lines.append(f"| g{k} | sparse rows={s.rows} | allgather "
-                         f"| {s.rows * s.row_elems} "
+                         f"| {codec} | {be} | {s.rows * s.row_elems} "
                          f"| {self._wire_dtype_for(s)} |")
         return "\n".join(lines)
 
@@ -401,14 +465,19 @@ class ExchangePlan:
 
     def pack_bucket(self, bucket: DenseBucket, leaves: List[Any]
                     ) -> jax.Array:
-        """Fuse a bucket into one 1-D wire buffer.  Densification of
+        """Fuse a bucket into one 1-D buffer.  Densification of
         deferred-sparse slots happens HERE (Pallas kernel if configured),
-        fused with the wire-dtype downcast."""
+        fused with the codec's narrowing cast.  Linear codecs pack
+        straight into the wire dtype; non-linear codecs pack f32 and
+        quantise afterwards (``codec.encode`` needs the full-precision
+        buffer for its absmax scale)."""
+        pack_dtype = (bucket.wire_dtype if self.config.codec_obj.linear
+                      else "float32")
         parts = []
         for slot in bucket.slots:
             leaf_id = self.dense_leaf_ids[slot.leaf_idx]
             x = _materialise(leaves[leaf_id], self.config)
-            parts.append(x.reshape(-1).astype(bucket.wire_dtype))
+            parts.append(x.reshape(-1).astype(pack_dtype))
         return parts[0] if len(parts) == 1 else jnp.concatenate(parts)
 
     def unpack_bucket(self, bucket: DenseBucket, buf: jax.Array,
@@ -424,65 +493,142 @@ class ExchangePlan:
                 x = x * inv_scale
             out[leaf_id] = x
 
+    def _check_axes(self, axis_name: comm.AxisNames) -> Tuple[str, ...]:
+        axes = tuple(a for a in ([axis_name] if isinstance(axis_name, str)
+                                 else (axis_name or ())))
+        if self.config.is_hierarchical and axes \
+                and len(axes) != self.config.hierarchy_levels:
+            raise ValueError(
+                f"hierarchical plan spans {self.config.hierarchy_levels} "
+                f"mesh axes but got axis_name={axis_name!r}")
+        return axes
+
+    def _exchange_gather_leaf(self, s: IndexedSlices, spec: SparseSpec,
+                              axes: Tuple[str, ...], p: int
+                              ) -> IndexedSlices:
+        """Allgather one IndexedSlices leaf through the codec/backend:
+        only the WIRE is narrow — values are decoded back to the leaf
+        dtype before the scatter-add so duplicate rows accumulate at
+        full precision."""
+        codec = self.config.codec_obj
+        be = self.config.backend_obj
+        if codec.linear:
+            wire = codec.encode(s.values,
+                                use_kernel=self.config.use_kernel)[0]
+            if not axes:
+                return IndexedSlices(s.indices,
+                                     codec.decode(wire, None, spec.dtype),
+                                     s.dense_shape)
+            g_idx = be.all_gather(s.indices, axes)
+            g_vals = codec.decode(be.all_gather(wire, axes), None,
+                                  spec.dtype)
+            return IndexedSlices(g_idx, g_vals, s.dense_shape)
+        wire, scale = codec.encode(s.values,
+                                   use_kernel=self.config.use_kernel)
+        if not axes:
+            return IndexedSlices(s.indices,
+                                 codec.decode(wire, scale, spec.dtype),
+                                 s.dense_shape)
+        g_idx = be.all_gather(s.indices, axes)
+        g_wire = be.all_gather(wire, axes)            # (p*rows, ...)
+        g_scales = be.all_gather(scale, axes)         # (p,)
+        rows = s.values.shape[0]
+        per = g_wire.astype(jnp.float32).reshape(
+            (p, rows) + g_wire.shape[1:])
+        per = per * g_scales.astype(jnp.float32).reshape(
+            (p,) + (1,) * (per.ndim - 1))
+        g_vals = per.reshape(g_wire.shape).astype(spec.dtype)
+        return IndexedSlices(g_idx, g_vals, s.dense_shape)
+
+    def _exchange_dense_bucket(self, bucket: DenseBucket, buf: jax.Array,
+                               axes: Tuple[str, ...], p: int) -> jax.Array:
+        """One bucket's collective through the codec/backend."""
+        codec = self.config.codec_obj
+        be = self.config.backend_obj
+        if codec.linear:
+            if not axes:
+                return buf
+            if bucket.collective == REDUCE_SCATTER:
+                pad = -len(buf) % p
+                if pad:
+                    buf = jnp.pad(buf, (0, pad))
+                shard = be.reduce_scatter(buf, axes)
+                return be.all_gather(shard, axes)[:bucket.n_elems]
+            return be.all_reduce(buf, axes)
+        # non-linear (quantised) codec: workers quantise against their
+        # own absmax scale, so the wire cannot be reduced in flight —
+        # allgather (values, scales) and reduce after decode
+        wire, scale = codec.encode(buf, use_kernel=self.config.use_kernel)
+        if not axes:
+            return codec.decode(wire, scale, jnp.float32)
+        g_wire = be.all_gather(wire, axes)
+        g_scales = be.all_gather(scale, axes)
+        return codecs.sum_decoded(codec, g_wire, g_scales, p, jnp.float32)
+
     def execute(self, grads, axis_name: comm.AxisNames,
                 average: bool = True):
         """Steps 1-3: accumulate, exchange per the schedule, densify.
 
         Must be called under ``shard_map``/``pjit`` with the mesh axes
-        bound (or with ``axis_name=None`` for the local no-op path).
+        bound (or with ``axis_name=None`` for the local path — the codec
+        round-trip still runs so single-device tests see the same wire
+        precision, but every collective degrades to a no-op).
         """
         leaves = self.accumulate(grads)
-        axes = tuple(a for a in ([axis_name] if isinstance(axis_name, str)
-                                 else (axis_name or ())))
-        if self.config.hierarchical and axes \
-                and len(axes) != self.config.hierarchy_levels:
-            raise ValueError(
-                f"hierarchical plan spans {self.config.hierarchy_levels} "
-                f"mesh axes but got axis_name={axis_name!r}")
+        axes = self._check_axes(axis_name)
         p = comm.axis_size(axes) if axes else 1
         inv_scale = (1.0 / p) if average and axes else None
         out: List[Any] = list(leaves)
 
         # gather buckets: allgather the slices, densify, average
         for i in self.gather_leaf_ids:
-            s = leaves[i]
-            if self.config.wire_dtype is not None:
-                s = IndexedSlices(s.indices,
-                                  s.values.astype(self.config.wire_dtype),
-                                  s.dense_shape)
-            g = comm.all_gather_slices(s, axes if axes else None)
-            if self.config.wire_dtype is not None:
-                # only the WIRE is narrow: upcast before the scatter-add
-                # so duplicate rows accumulate at full precision
-                g = IndexedSlices(g.indices,
-                                  g.values.astype(self.leaf_specs[i].dtype),
-                                  g.dense_shape)
+            g = self._exchange_gather_leaf(leaves[i], self.leaf_specs[i],
+                                           axes, p)
             x = accumulation.densify(g, use_kernel=self.config.use_kernel)
             x = x.astype(self.leaf_specs[i].dtype)
             if inv_scale is not None:
                 x = x * inv_scale
             out[i] = x
 
-        # dense buckets: pack (densify fused), one collective, unpack
+        # dense buckets: pack (densify fused), collective, unpack
         for bucket in self.dense_buckets:
             buf = self.pack_bucket(bucket, leaves)
-            if axes:
-                if bucket.collective == REDUCE_SCATTER:
-                    pad = -len(buf) % p
-                    if pad:
-                        buf = jnp.pad(buf, (0, pad))
-                    shard = jax.lax.psum_scatter(
-                        buf, axes if len(axes) > 1 else axes[0],
-                        scatter_dimension=0, tiled=True)
-                    buf = comm.all_gather_dense(shard,
-                                                axes)[:bucket.n_elems]
-                elif bucket.collective == HIERARCHICAL:
-                    buf = comm.two_level_all_reduce(buf, axes,
-                                                    average=False)
-                else:
-                    buf = comm.all_reduce_dense(buf, axes, average=False)
+            buf = self._exchange_dense_bucket(bucket, buf, axes, p)
             self.unpack_bucket(bucket, buf, out, inv_scale)
         # every leaf is either bucketed or gathered: nothing pending here
+        return jax.tree_util.tree_unflatten(self.treedef, out)
+
+    def broadcast(self, tree, axis_name: comm.AxisNames, root: int = 0):
+        """Broadcast a pytree (e.g. refreshed serving weights) from
+        worker ``root`` through the SAME bucketing/codec/backend the
+        gradient exchange uses — the serving-side weight hot-swap.
+
+        Requires an all-dense plan (params trees are; compile with
+        ``sparse_as_dense=True``)."""
+        if self.gather_leaf_ids:
+            raise ValueError("broadcast needs an all-dense plan; compile "
+                             "with sparse_as_dense=True")
+        leaves, treedef = jax.tree_util.tree_flatten(tree, is_leaf=_is_leaf)
+        if treedef != self.treedef:
+            raise ValueError(f"tree structure changed: {treedef} "
+                             f"!= planned {self.treedef}")
+        axes = self._check_axes(axis_name)
+        codec = self.config.codec_obj
+        be = self.config.backend_obj
+        out: List[Any] = list(leaves)
+        for bucket in self.dense_buckets:
+            buf = self.pack_bucket(bucket, leaves)
+            if codec.linear:
+                if axes:
+                    buf = be.broadcast(buf, axes, root=root)
+            else:
+                wire, scale = codec.encode(
+                    buf, use_kernel=self.config.use_kernel)
+                if axes:
+                    wire = be.broadcast(wire, axes, root=root)
+                    scale = be.broadcast(scale, axes, root=root)
+                buf = codec.decode(wire, scale, jnp.float32)
+            self.unpack_bucket(bucket, buf, out, None)
         return jax.tree_util.tree_unflatten(self.treedef, out)
 
 
@@ -506,10 +652,11 @@ def _build_plan(treedef, contrib_specs: Tuple[Tuple[LeafSpec, ...], ...],
     # bucket dense leaves with the Horovod fusion planner, one group per
     # wire dtype (so packed buffers never promote and byte accounting is
     # exact); thresholds are measured in WIRE bytes so bf16 wires pack
-    # twice the elements per bucket
+    # twice — and int8 wires four times — the elements per bucket
+    codec = config.codec_obj
     groups: Dict[str, List[int]] = {}
     for i in dense_ids:
-        dt = config.wire_dtype or leaf_specs[i].dtype
+        dt = codec.wire_dtype(leaf_specs[i].dtype)
         groups.setdefault(dt, []).append(i)
     threshold = (config.fusion_threshold
                  if config.fusion_threshold is not None else 0)

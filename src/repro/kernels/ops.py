@@ -19,6 +19,7 @@ from repro.kernels.densify import densify_pallas, DEFAULT_BLOCK_N, \
     DEFAULT_BLOCK_V, DEFAULT_BLOCK_D
 from repro.kernels.flash_attention import flash_attention_pallas, \
     DEFAULT_BLOCK_Q, DEFAULT_BLOCK_K
+from repro.kernels.quantize import quantize_pallas, QMAX
 from repro.kernels.ssd import ssd_pallas
 
 
@@ -53,6 +54,30 @@ def densify(indices: jax.Array, values: jax.Array,
     out = densify_pallas(idx, vals, (vp, dp), block_v=block_v,
                          block_d=block_d, block_n=block_n)
     return out[:vocab, :d]
+
+
+# ---------------------------------------------------------------------------
+# int8 wire quantisation (the int8 WireCodec's encode hot loop)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def quantize_int8(x: jax.Array, impl: str = "pallas"):
+    """Quantise ``x`` to (int8 values, f32 absmax scale ``(1,)``).
+
+    ``q = clip(round(x / scale), -127, 127)`` with
+    ``scale = absmax(x) / 127``; ``impl="pallas"`` runs the fused
+    scale/round/clip/cast chain as one VPU pass (interpret on CPU),
+    ``impl="xla"`` is the pure-jax fallback.  Dequantise with
+    ``q.astype(f32) * scale``.
+    """
+    flat = x.reshape(-1).astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(flat)) if flat.size else jnp.float32(0)
+    scale = jnp.maximum(absmax, jnp.float32(1e-30)) / QMAX
+    if impl == "xla":
+        q = jnp.clip(jnp.round(flat / scale), -QMAX, QMAX).astype(jnp.int8)
+    else:
+        q = quantize_pallas(flat, 1.0 / scale)
+    return q.reshape(x.shape), scale.reshape(1)
 
 
 # ---------------------------------------------------------------------------

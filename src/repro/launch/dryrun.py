@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import INPUT_SHAPES, get_config
-from repro.core import DistributedOptimizer, comm
+from repro.core import DistributedOptimizer, ExchangeConfig, comm
 from repro.launch import flops as flops_lib
 from repro.launch import hlo as hlo_lib
 from repro.launch import mesh as mesh_lib
@@ -86,8 +86,10 @@ def lower_step(arch: str, shape_name: str, multi_pod: bool,
 
     if shape.kind == "train":
         opt = DistributedOptimizer(
-            adamw(noam_schedule(cfg.d_model)), sparse_as_dense=True,
-            algorithm="proposed_algorithm2", axis_name=None)
+            adamw(noam_schedule(cfg.d_model)),
+            exchange=ExchangeConfig(sparse_as_dense=True,
+                                    algorithm="proposed_algorithm2"),
+            axis_name=None)
         step = make_train_step(model, opt, sparse_embedding=False,
                                attn_impl=attn_impl, loss_chunk=loss_chunk,
                                remat=True)
@@ -210,30 +212,11 @@ def analyse(lowered, meta: Dict[str, Any], n_chips: int,
     return out
 
 
-def audit_exchange_plan(arch: str = "transformer-big", n_workers: int = 8,
-                        reduced: bool = True,
-                        sparse_as_dense: bool = True,
-                        algorithm: str = "tf_algorithm1",
-                        fusion_threshold: Optional[int] = None,
-                        reduce_scatter: bool = False,
-                        wire_dtype: Optional[str] = None,
-                        batch_per_worker: int = 2,
-                        seq_len: int = 32) -> Dict[str, Any]:
-    """Check the static ExchangePlan against lowered HLO.
-
-    Lowers the plan-scheduled exchange under ``shard_map`` on
-    ``n_workers`` devices and compares the plan's ``n_collectives`` /
-    ``wire_bytes`` with the collective ops actually present in the
-    compiled HLO (the same audit ``analyse`` applies to full steps).
-    One gather bucket lowers to TWO all-gather ops (indices + values),
-    exactly as Horovod's IndexedSlices allgather does.
-    """
-    import numpy as np
-    from jax.sharding import Mesh, PartitionSpec as P
-    from jax.experimental.shard_map import shard_map
-
+def _audit_grads(arch: str, reduced: bool, batch_per_worker: int,
+                 seq_len: int):
+    """Real gradient-contribution tree for the audit (shared by the
+    shard_map and GSPMD audit paths)."""
     from repro.data import make_pipeline
-    from repro.optim import adamw as adamw_opt
     from repro.training.gradients import grad_contributions
 
     cfg = get_config(arch)
@@ -246,14 +229,10 @@ def audit_exchange_plan(arch: str = "transformer-big", n_workers: int = 8,
     batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(0).items()}
     grads, _, _ = grad_contributions(model, params, batch,
                                      sparse_embedding=True)
+    return cfg, grads
 
-    opt = DistributedOptimizer(
-        adamw_opt(noam_schedule(cfg.d_model)),
-        sparse_as_dense=sparse_as_dense, algorithm=algorithm,
-        axis_name=("data",), fusion_threshold=fusion_threshold,
-        reduce_scatter=reduce_scatter, wire_dtype=wire_dtype)
-    plan = opt.plan(grads)
 
+def _require_devices(n_workers: int) -> None:
     if len(jax.devices()) < n_workers:
         # the module-top XLA_FLAGS override only helps if jax was not
         # initialised before this module was imported
@@ -262,7 +241,63 @@ def audit_exchange_plan(arch: str = "transformer-big", n_workers: int = 8,
             f"{len(jax.devices())}; set XLA_FLAGS="
             f"--xla_force_host_platform_device_count={n_workers} before "
             f"jax initialises")
-    mesh = Mesh(np.array(jax.devices()[:n_workers]), ("data",))
+
+
+def audit_exchange_plan(arch: str = "transformer-big", n_workers: int = 8,
+                        reduced: bool = True,
+                        sparse_as_dense: bool = True,
+                        algorithm: str = "tf_algorithm1",
+                        fusion_threshold: Optional[int] = None,
+                        reduce_scatter: bool = False,
+                        wire_dtype: Optional[str] = None,
+                        codec: str = "identity",
+                        backend: str = "jax",
+                        batch_per_worker: int = 2,
+                        seq_len: int = 32) -> Dict[str, Any]:
+    """Check the static ExchangePlan against lowered HLO.
+
+    Lowers the plan-scheduled exchange under ``shard_map`` on
+    ``n_workers`` devices and compares the plan's ``hlo_collectives`` /
+    ``wire_bytes`` with the collective ops actually present in the
+    compiled HLO (the same audit ``analyse`` applies to full steps).
+    The expected op count comes from the plan itself: one gather bucket
+    lowers to one all-gather per exchanged tensor (indices + values
+    [+ codec scales], exactly like Horovod's IndexedSlices allgather);
+    hierarchical buckets lower to one psum per mesh axis; the ring-sim
+    backend lowers to its 2(P-1) collective-permute hops.  With
+    ``backend="hierarchical"`` the mesh is folded to
+    ``("pod", "data") = (2, n_workers//2)``.
+    """
+    import numpy as np
+    from jax.sharding import Mesh, PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+
+    from repro.optim import adamw as adamw_opt
+
+    cfg, grads = _audit_grads(arch, reduced, batch_per_worker, seq_len)
+    _require_devices(n_workers)
+    if backend == "hierarchical":
+        if n_workers % 2:
+            raise ValueError("hierarchical audit needs even n_workers")
+        workers = (2, n_workers // 2)
+        axis_name = ("pod", "data")
+        mesh = Mesh(np.array(jax.devices()[:n_workers]).reshape(workers),
+                    axis_name)
+    else:
+        workers = n_workers
+        axis_name = ("data",)
+        mesh = Mesh(np.array(jax.devices()[:n_workers]), axis_name)
+
+    opt = DistributedOptimizer(
+        adamw_opt(noam_schedule(cfg.d_model)),
+        exchange=ExchangeConfig(
+            sparse_as_dense=sparse_as_dense, algorithm=algorithm,
+            fusion_threshold=fusion_threshold,
+            reduce_scatter=reduce_scatter, wire_dtype=wire_dtype,
+            codec=codec, backend=backend),
+        axis_name=axis_name)
+    plan = opt.plan(grads)
+
     ex = shard_map(opt.exchange, mesh=mesh, in_specs=(P(),),
                    out_specs=P(), check_rep=False)
     hlo = jax.jit(ex).lower(grads).compile().as_text()
@@ -270,35 +305,125 @@ def audit_exchange_plan(arch: str = "transformer-big", n_workers: int = 8,
     coll_bytes = {k: v for k, v in hlo_lib.analyze_collectives(hlo).items()
                   if k != "__bytes__"}
 
-    # per-op ring wire bytes implied by the HLO result sizes
+    # per-op ring wire bytes implied by the HLO result sizes, under the
+    # configured backend's lowering
     p = n_workers
-    hlo_wire = (2 * (p - 1) / p * coll_bytes.get("all-reduce", 0.0)
-                + (p - 1) / p * coll_bytes.get("all-gather", 0.0)
-                + (p - 1) * coll_bytes.get("reduce-scatter", 0.0))
+    levels = workers if isinstance(workers, tuple) else (workers,)
+    hlo_wire = plan.config.backend_obj.hlo_wire_estimate(coll_bytes, levels)
 
-    n_gather = len(plan.gather_leaf_ids)
-    expected_hlo_ops = plan.n_collectives + n_gather  # indices+values
+    expected_hlo_ops = plan.hlo_collectives(workers)
     hlo_ops = sum(counts.values())
-    planned_wire = plan.wire_bytes(p)
+    planned_wire = plan.wire_bytes(workers)
     note = None
-    if plan.config.wire_dtype is not None \
+    wire_dt = plan.config.codec_obj.wire_dtype("float32")
+    if plan.config.codec_obj.linear and wire_dt != "float32" \
             and jax.default_backend() == "cpu":
-        # the CPU backend upcasts narrow collectives to f32 (see
+        # the CPU backend upcasts narrow float collectives to f32 (see
         # hlo.analyze_collectives); the TPU wire stays at wire_dtype, so
         # the planned/HLO ratio is itemsize(wire)/4 here, 1.0 on TPU
         note = ("cpu backend computes %s collectives in f32; expect "
-                "wire_ratio %.2f" % (plan.config.wire_dtype,
-                                     comm.dtype_bytes(
-                                         plan.config.wire_dtype) / 4))
+                "wire_ratio %.2f" % (wire_dt,
+                                     comm.dtype_bytes(wire_dt) / 4))
     return dict(
         note=note,
-        arch=arch, reduced=reduced, n_workers=p,
-        strategy=opt.exchange_stats(grads, p).strategy,
+        arch=arch, reduced=reduced, n_workers=p, audit_mode="shard_map",
+        codec=plan.config.codec, backend=plan.config.backend,
+        strategy=opt.exchange_stats(grads, workers).strategy,
         planned_n_collectives=plan.n_collectives,
         planned_hlo_ops=expected_hlo_ops,
         hlo_ops=hlo_ops,
         hlo_counts=counts,
         counts_match=hlo_ops == expected_hlo_ops,
+        planned_wire_bytes=planned_wire,
+        hlo_wire_bytes=hlo_wire,
+        wire_ratio=(planned_wire / hlo_wire if hlo_wire else None),
+        plan_table=plan.describe(),
+    )
+
+
+def audit_exchange_gspmd(arch: str = "transformer-big", n_workers: int = 8,
+                         reduced: bool = True,
+                         fusion_threshold: Optional[int] = None,
+                         codec: str = "identity",
+                         backend: str = "jax",
+                         batch_per_worker: int = 2,
+                         seq_len: int = 32) -> Dict[str, Any]:
+    """Planned vs COMPILER-CHOSEN collectives on the GSPMD path.
+
+    The shard_map audit checks the collectives we schedule explicitly;
+    the GSPMD training path instead jits a replicated-output reduction
+    over data-sharded per-worker gradients and lets the XLA SPMD
+    partitioner pick the collectives.  This audit lowers exactly that —
+    per-worker contribution trees (leading worker axis sharded over
+    ``data``), vmapped plan-classified accumulation, mean over workers,
+    replicated output — and reports the partitioner's collective
+    ops/bytes next to the plan's schedule, so divergence (op fusion,
+    all-gather-based reductions, dtype promotion) is visible per arch.
+
+    Dense-destined plans only: the gather path's data-dependent row
+    counts cannot round-trip through GSPMD without ragged support, which
+    is precisely why the explicit shard_map path exists.
+    """
+    import numpy as np
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+    from repro.optim import adamw as adamw_opt
+
+    cfg, grads = _audit_grads(arch, reduced, batch_per_worker, seq_len)
+    _require_devices(n_workers)
+
+    opt = DistributedOptimizer(
+        adamw_opt(noam_schedule(cfg.d_model)),
+        exchange=ExchangeConfig(
+            sparse_as_dense=True, fusion_threshold=fusion_threshold,
+            codec=codec, backend=backend),
+        axis_name=None)
+    plan = opt.plan(grads)
+    if plan.gather_leaf_ids:
+        raise ValueError("GSPMD audit supports dense-destined plans only "
+                         "(use the shard_map audit for gather plans)")
+
+    # stack every contribution n_workers times along a leading axis —
+    # the per-worker gradient copies the data-parallel backward would
+    # produce (values are irrelevant to the collective audit)
+    stacked = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (n_workers,) + x.shape),
+        grads)
+
+    def gspmd_exchange(g):
+        acc = jax.vmap(plan.accumulate_tree)(g)
+        return jax.tree_util.tree_map(lambda x: jnp.mean(x, axis=0), acc)
+
+    mesh = Mesh(np.array(jax.devices()[:n_workers]), ("data",))
+    # prefix shardings: every input leaf worker-sharded on its leading
+    # axis, every output leaf fully replicated — replication is what
+    # forces the partitioner to materialise cross-worker collectives
+    hlo = jax.jit(gspmd_exchange,
+                  in_shardings=(NamedSharding(mesh, P("data")),),
+                  out_shardings=NamedSharding(mesh, P())
+                  ).lower(stacked).compile().as_text()
+    counts = hlo_lib.count_collectives(hlo)
+    coll_bytes = {k: v for k, v in hlo_lib.analyze_collectives(hlo).items()
+                  if k != "__bytes__"}
+    p = n_workers
+    hlo_wire = plan.config.backend_obj.hlo_wire_estimate(coll_bytes, (p,))
+    planned_wire = plan.wire_bytes(p)
+    hlo_ops = sum(counts.values())
+    return dict(
+        arch=arch, reduced=reduced, n_workers=p, audit_mode="gspmd",
+        codec=plan.config.codec, backend=plan.config.backend,
+        strategy=opt.exchange_stats(grads, p).strategy,
+        planned_n_collectives=plan.n_collectives,
+        planned_hlo_ops=plan.hlo_collectives(p),
+        hlo_ops=hlo_ops,
+        hlo_counts=counts,
+        # counts_match keeps its shard_map meaning (exact op-count
+        # agreement); GSPMD may legally fuse/split differently, so the
+        # CLI success criterion is collectives_found and the delta is
+        # reported for comparison
+        counts_match=hlo_ops == plan.hlo_collectives(p),
+        collectives_found=hlo_ops > 0,
+        collective_delta=hlo_ops - plan.hlo_collectives(p),
         planned_wire_bytes=planned_wire,
         hlo_wire_bytes=hlo_wire,
         wire_ratio=(planned_wire / hlo_wire if hlo_wire else None),
@@ -373,6 +498,18 @@ def main(argv=None) -> int:
                     help="audit the static ExchangePlan against lowered "
                          "HLO collectives instead of running a dry-run")
     ap.add_argument("--audit-workers", type=int, default=8)
+    ap.add_argument("--audit-mode", default="shard_map",
+                    choices=["shard_map", "gspmd"],
+                    help="shard_map: explicitly-scheduled collectives "
+                         "must match the plan exactly; gspmd: lower the "
+                         "non-shard_map training path and report the "
+                         "compiler-chosen collectives next to the plan")
+    ap.add_argument("--codec", default="identity",
+                    help="WireCodec registry name (identity, bf16, f16, "
+                         "int8, ...)")
+    ap.add_argument("--backend", default="jax",
+                    help="CollectiveBackend registry name (jax, "
+                         "hierarchical, ringsim, ...)")
     ap.add_argument("--full-size", action="store_true",
                     help="with --audit-exchange: use the full (not "
                          "reduced) config")
@@ -399,18 +536,30 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     if args.audit_exchange:
-        result = audit_exchange_plan(
-            arch=args.arch, n_workers=args.audit_workers,
-            reduced=not args.full_size,
-            sparse_as_dense=args.grad_accum == "dense_reduce",
-            fusion_threshold=args.fusion_threshold,
-            reduce_scatter=args.reduce_scatter,
-            wire_dtype=args.wire_dtype)
+        if args.audit_mode == "gspmd":
+            result = audit_exchange_gspmd(
+                arch=args.arch, n_workers=args.audit_workers,
+                reduced=not args.full_size,
+                fusion_threshold=args.fusion_threshold,
+                codec=args.codec, backend=args.backend)
+        else:
+            result = audit_exchange_plan(
+                arch=args.arch, n_workers=args.audit_workers,
+                reduced=not args.full_size,
+                sparse_as_dense=args.grad_accum == "dense_reduce",
+                fusion_threshold=args.fusion_threshold,
+                reduce_scatter=args.reduce_scatter,
+                wire_dtype=args.wire_dtype,
+                codec=args.codec, backend=args.backend)
         print(json.dumps(result, indent=2, default=str))
         if args.out:
             with open(args.out, "w") as f:
                 json.dump(result, f, indent=2, default=str)
-        return 0 if result["counts_match"] else 1
+        # gspmd mode is a comparison (the partitioner may legally fuse);
+        # shard_map mode demands exact agreement
+        ok = (result["collectives_found"] if args.audit_mode == "gspmd"
+              else result["counts_match"])
+        return 0 if ok else 1
 
     if args.shape is None:
         ap.error("--shape is required unless --audit-exchange is given")

@@ -32,25 +32,36 @@ from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.configs import get_config
-from repro.core import DistributedOptimizer
+from repro.core import DistributedOptimizer, ExchangeConfig
 from repro.data import make_pipeline
 from repro.models import build_model
 from repro.optim import adamw, noam_schedule
 from repro.training import Trainer, TrainerConfig, make_train_step
 
 
+def dist_axes(args):
+    """Mesh axis names for --dist horovod (the hierarchical backend
+    spans two axes: within-pod + cross-pod)."""
+    if args.dist != "horovod":
+        return None
+    return ("pod", "data") if args.backend == "hierarchical" else ("data",)
+
+
 def build_optimizer(args, cfg) -> DistributedOptimizer:
     base = adamw(noam_schedule(cfg.d_model, warmup_steps=args.warmup))
-    sparse_as_dense = args.grad_accum == "dense_reduce"
-    axis = ("data",) if args.dist == "horovod" else None
+    axis = dist_axes(args)
     return DistributedOptimizer(
         base,
-        sparse_as_dense=sparse_as_dense,
-        algorithm=args.algorithm,
+        exchange=ExchangeConfig(
+            sparse_as_dense=args.grad_accum == "dense_reduce",
+            algorithm=args.algorithm,
+            fusion_threshold=args.fusion_threshold,
+            reduce_scatter=args.reduce_scatter,
+            wire_dtype=args.wire_dtype,
+            codec=args.codec,
+            backend=args.backend,
+        ),
         axis_name=axis,
-        fusion_threshold=args.fusion_threshold,
-        reduce_scatter=args.reduce_scatter,
-        wire_dtype=args.wire_dtype,
     )
 
 
@@ -71,8 +82,14 @@ def main(argv=None) -> int:
                          "allgather (ZeRO-style) instead of allreduce")
     ap.add_argument("--wire-dtype", default=None,
                     choices=[None, "bf16", "bfloat16", "f16", "float16"],
-                    help="downcast fusion buffers to this dtype on the "
-                         "wire (upcast on unpack)")
+                    help="deprecated spelling of --codec: downcast "
+                         "fusion buffers to this dtype on the wire")
+    ap.add_argument("--codec", default="identity",
+                    help="WireCodec registry name for the gradient wire "
+                         "(identity, bf16, f16, int8, ...)")
+    ap.add_argument("--backend", default="jax",
+                    help="CollectiveBackend registry name (jax, "
+                         "hierarchical, ringsim, ...)")
     ap.add_argument("--batch-per-worker", type=int, default=4)
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--steps", type=int, default=50)
@@ -99,14 +116,23 @@ def main(argv=None) -> int:
 
     n_dev = len(jax.devices())
     if args.dist == "horovod":
-        mesh = Mesh(np.array(jax.devices()).reshape(n_dev), ("data",))
-        pspec_batch = P("data")
+        axes = dist_axes(args)
+        if len(axes) == 2:
+            if n_dev % 2:
+                raise SystemExit("hierarchical backend needs an even "
+                                 "worker count (2 emulated pods)")
+            shape = (2, n_dev // 2)
+        else:
+            shape = (n_dev,)
+        mesh = Mesh(np.array(jax.devices()).reshape(shape), axes)
+        pspec_batch = P(axes)
         step = shard_map(step, mesh=mesh,
                          in_specs=(P(), P(), pspec_batch),
                          out_specs=(P(), P(), P()),
                          check_rep=False)
         batch_per_host = args.batch_per_worker * n_dev
-        print(f"horovod mode: {n_dev} workers, global batch "
+        print(f"horovod mode: {n_dev} workers ({'x'.join(map(str, shape))}"
+              f" {'/'.join(axes)}), global batch "
               f"{batch_per_host}x{args.seq_len} tokens")
     else:
         batch_per_host = args.batch_per_worker

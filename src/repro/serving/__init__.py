@@ -1,2 +1,3 @@
-from repro.serving.engine import ServeEngine, sample_greedy
+from repro.serving.engine import (ServeEngine, broadcast_params,
+                                  broadcast_plan, sample_greedy)
 from repro.serving.scheduler import ContinuousBatcher, Request, SchedulerStats

@@ -3,6 +3,12 @@
 ``serve_step`` (one token for the whole batch, cache of ``seq_len``) is
 what the decode dry-run shapes lower.  The engine adds batched request
 handling on top: pad-to-batch, greedy/temperature sampling, EOS stop.
+
+``broadcast_params`` is the serving-side weight hot-swap: refreshed
+checkpoints land on ONE worker and fan out to the rest through the SAME
+``ExchangePlan`` bucketing / ``WireCodec`` / ``CollectiveBackend`` stack
+the training exchange uses — fused buckets instead of one broadcast per
+tensor, optionally on a narrowed (bf16/int8) wire.
 """
 from __future__ import annotations
 
@@ -13,9 +19,54 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import ExchangeConfig, ExchangePlan, comm, compile_plan
+
 
 def sample_greedy(logits: jax.Array) -> jax.Array:
     return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def broadcast_plan(params, codec: str = "identity",
+                   backend: str = "jax",
+                   fusion_threshold: Optional[int] = None) -> ExchangePlan:
+    """Compile (or fetch from cache) the ExchangePlan used to broadcast
+    a params tree.  ``sparse_as_dense`` because weights are dense; the
+    same plan-cache the training exchange uses serves the hot-swap."""
+    return compile_plan(params, ExchangeConfig(
+        sparse_as_dense=True, codec=codec, backend=backend,
+        fusion_threshold=fusion_threshold))
+
+
+def broadcast_params(params, plan: Optional[ExchangePlan] = None,
+                     backend: Optional[str] = None,
+                     codec: Optional[str] = None,
+                     axis_name: comm.AxisNames = None,
+                     root: int = 0,
+                     fusion_threshold: Optional[int] = None):
+    """Weight hot-swap: broadcast ``params`` from worker ``root``.
+
+    Packs the tree into the plan's fusion buckets, runs one
+    backend-lowered broadcast per bucket (optionally codec-narrowed),
+    and unpacks — reusing the gradient exchange's bucketing instead of
+    issuing one tiny collective per tensor.  Call under ``shard_map``
+    with ``axis_name`` bound; with ``axis_name=None`` it degrades to the
+    local codec round-trip (single-process serving).
+
+    Passing both ``plan`` and a conflicting ``codec``/``backend`` is an
+    error — the plan already fixes both.
+    """
+    if plan is None:
+        plan = broadcast_plan(params, codec=codec or "identity",
+                              backend=backend or "jax",
+                              fusion_threshold=fusion_threshold)
+    else:
+        if backend is not None and backend != plan.config.backend:
+            raise ValueError(f"plan was compiled for backend="
+                             f"{plan.config.backend!r}, got {backend!r}")
+        if codec is not None and codec != plan.config.codec:
+            raise ValueError(f"plan was compiled for codec="
+                             f"{plan.config.codec!r}, got {codec!r}")
+    return plan.broadcast(params, axis_name, root=root)
 
 
 @dataclasses.dataclass
@@ -43,6 +94,23 @@ class ServeEngine:
                              attn_impl=impl, ring=ring)
 
         self._jit_prefill = jax.jit(_prefill)
+
+    def hot_swap(self, new_params, codec: str = "identity",
+                 backend: str = "jax") -> None:
+        """Swap serving weights in place via ``broadcast_params``.
+
+        Single-process form: runs the plan's pack/codec/unpack pipeline
+        locally (so a narrowed codec shows the same wire precision it
+        would on a mesh) and stores the result.  The jitted step/prefill
+        closures take params as an argument, so no re-compilation
+        happens — the next ``generate`` call serves the refreshed
+        weights.  For a live mesh, call ``broadcast_params`` with
+        ``axis_name`` bound *inside* the serving ``shard_map``/``pjit``
+        program and feed the result back in as the params argument —
+        collectives cannot run from a Python-side attribute assignment.
+        """
+        self.params = broadcast_params(new_params, codec=codec,
+                                       backend=backend, axis_name=None)
 
     def generate(self, prompts: np.ndarray, max_new: int = 32
                  ) -> np.ndarray:

@@ -6,6 +6,7 @@ import os
 import subprocess
 import sys
 import textwrap
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -14,8 +15,10 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (DistributedOptimizer, ExchangeConfig, IndexedSlices,
-                        accumulate_gradients, clear_plan_cache, comm,
-                        compile_plan, densify, exchange, plan_cache_info)
+                        accumulate_gradients, available_backends,
+                        available_codecs, clear_plan_cache, comm,
+                        compile_plan, densify, exchange, get_backend,
+                        get_codec, plan_cache_info)
 from repro.optim import adamw
 
 jax.config.update("jax_platform_name", "cpu")
@@ -219,6 +222,196 @@ def test_fusion_buckets_reduce_collective_count():
     assert fused.n_collectives == 1
     # fusion changes launches, not wire bytes
     assert abs(fused.wire_bytes(8) - unfused.wire_bytes(8)) <= 64
+
+
+# ---------------------------------------------------------------------------
+# codecs: registries, round-trip tolerance, wire-byte accounting
+# ---------------------------------------------------------------------------
+
+def test_codec_and_backend_registries():
+    assert {"identity", "bf16", "int8"} <= set(available_codecs())
+    assert {"jax", "hierarchical", "ringsim"} <= set(available_backends())
+    # dtype-ish names resolve through the deprecated wire_dtype spelling
+    assert get_codec("bfloat16") is get_codec("bf16")
+    with pytest.raises(ValueError):
+        get_codec("not-a-codec")
+    with pytest.raises(ValueError):
+        get_backend("not-a-backend")
+    with pytest.raises(ValueError):
+        ExchangeConfig(codec="not-a-codec")
+    with pytest.raises(ValueError):
+        ExchangeConfig(backend="not-a-backend")
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 4000),
+       st.floats(0.1, 1e4))
+@settings(max_examples=30, deadline=None)
+def test_codec_roundtrip_tolerances(seed, n, scale):
+    """identity is exact, bf16 within relative eps, int8 within the
+    per-bucket absmax scale bound."""
+    rng = np.random.default_rng(seed)
+    buf = jnp.asarray(rng.standard_normal(n) * scale, jnp.float32)
+    for name, tol in (("identity", 0.0),
+                      ("bf16", 2 ** -8 * float(jnp.abs(buf).max())),
+                      ("f16", 2 ** -10 * float(jnp.abs(buf).max()))):
+        codec = get_codec(name)
+        wire, side = codec.encode(buf)
+        assert side is None and codec.linear
+        out = codec.decode(wire, side, jnp.float32)
+        err = float(jnp.abs(out - buf).max())
+        assert err <= tol, (name, err, tol)
+    int8 = get_codec("int8")
+    wire, side = int8.encode(buf)
+    assert wire.dtype == jnp.int8 and side.shape == (1,)
+    out = int8.decode(wire, side, jnp.float32)
+    err = float(jnp.abs(out - buf).max())
+    assert err <= int8.max_error(buf), (err, int8.max_error(buf))
+
+
+def test_codec_wire_bytes_accounting():
+    n = 1000
+    assert get_codec("identity").wire_bytes(n, "float32") == 4 * n
+    assert get_codec("bf16").wire_bytes(n, "float32") == 2 * n
+    assert get_codec("int8").wire_bytes(n, "float32") == n + 4
+
+
+def test_int8_codec_wire_bytes_quarters_dense_wire():
+    tree = {"w": jnp.ones((64, 64), jnp.float32)}     # 4096 elems
+    f32 = compile_plan(tree, ExchangeConfig(sparse_as_dense=True))
+    q8 = compile_plan(tree, ExchangeConfig(sparse_as_dense=True,
+                                           codec="int8"))
+    # non-linear codecs exchange via allgather of (values, scales):
+    # (P-1) * (n * 1B + 4B scale) per worker.  That grows ~(P-1)n vs the
+    # ring allreduce's 2(P-1)/P * 4n, so the quantised-gather advantage
+    # holds for P < 8 and the accounting must expose the crossover
+    # honestly rather than billing a phantom 4x saving.
+    for p in (2, 4, 8, 16):
+        assert q8.wire_bytes(p) == (p - 1) * (64 * 64 + 4)
+    assert q8.wire_bytes(4) < f32.wire_bytes(4)        # below crossover
+    assert q8.wire_bytes(16) > f32.wire_bytes(16)      # beyond crossover
+    # the accumulated representation stays f32 (decode after exchange)
+    assert q8.buffer_bytes(8) == f32.buffer_bytes(8)
+
+
+def test_int8_codec_gather_leaf_accounting():
+    """Sparse gather buckets bill the codec's value payload + native
+    indices + the per-worker side scale."""
+    v, d, n = 24, 8, 6
+    tree = {"s": IndexedSlices(jnp.arange(n, dtype=jnp.int32),
+                               jnp.ones((n, d), jnp.float32), (v, d))}
+    plan = compile_plan(tree, ExchangeConfig(codec="int8"))
+    p = 8
+    payload = (n * d) * 1 + 4 + n * 4          # int8 rows + scale + idx
+    assert plan.wire_bytes(p) == (p - 1) * payload
+    assert plan.buffer_bytes(p) == p * (n * (d * 1 + 4) + 4)
+
+
+def test_int8_codec_rejects_reduce_scatter():
+    with pytest.raises(ValueError):
+        ExchangeConfig(sparse_as_dense=True, codec="int8",
+                       reduce_scatter=True)
+    with pytest.raises(ValueError):
+        ExchangeConfig(sparse_as_dense=True, reduce_scatter=True,
+                       backend="hierarchical")
+
+
+def test_int8_codec_plan_executes_locally_within_scale_bound():
+    """The local (axis_name=None) path still runs the quantise/decode
+    round-trip so single-device tests see the wire precision."""
+    tree = _demo_tree()
+    ref = densify(accumulate_gradients(tree["emb"], sparse_as_dense=True))
+    for use_kernel in (False, True):
+        opt = DistributedOptimizer(adamw(1e-3), exchange=ExchangeConfig(
+            sparse_as_dense=True, codec="int8", use_kernel=use_kernel))
+        out = opt.exchange(tree)
+        assert out["emb"].dtype == jnp.float32
+        bound = float(jnp.abs(ref).max()) / 127 + 1e-6
+        assert float(jnp.abs(out["emb"] - ref).max()) <= bound
+        assert float(jnp.abs(out["w"] - tree["w"]).max()) <= \
+            float(jnp.abs(tree["w"]).max()) / 127 + 1e-6
+
+
+def test_pallas_quantize_kernel_matches_xla_codec_path():
+    from repro.kernels import ops as kops
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(1000) * 3.7, jnp.float32)
+    qp, sp = kops.quantize_int8(x, impl="pallas")
+    qx, sx = kops.quantize_int8(x, impl="xla")
+    np.testing.assert_array_equal(np.asarray(qp), np.asarray(qx))
+    np.testing.assert_allclose(float(sp[0]), float(sx[0]), rtol=1e-7)
+    assert qp.dtype == jnp.int8
+
+
+def test_ringsim_backend_wire_accounting_matches_ring_formula():
+    """The ring sim bills the explicit 2(P-1) chunk hops — equal to the
+    classic ring-allreduce formula up to chunk padding."""
+    tree = {"w": jnp.ones((64, 64), jnp.float32)}     # 4096 % 8 == 0
+    flat = compile_plan(tree, ExchangeConfig(sparse_as_dense=True))
+    ring = compile_plan(tree, ExchangeConfig(sparse_as_dense=True,
+                                             backend="ringsim"))
+    assert ring.wire_bytes(8) == flat.wire_bytes(8)
+    # padding shows up when P does not divide the bucket
+    assert ring.wire_bytes(7) >= flat.wire_bytes(7)
+    assert ring.n_collectives == flat.n_collectives
+    assert ring.hlo_collectives(8) == 2 * 7
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims: old-style flags == new-style ExchangeConfig
+# ---------------------------------------------------------------------------
+
+def test_deprecated_optimizer_flags_map_onto_exchange_config():
+    clear_plan_cache()
+    tree = _demo_tree()
+    with pytest.warns(DeprecationWarning):
+        old = DistributedOptimizer(adamw(1e-3), sparse_as_dense=True,
+                                   reduce_scatter=True, wire_dtype="bf16",
+                                   use_kernel=False,
+                                   fusion_threshold=1 << 20)
+    new = DistributedOptimizer(adamw(1e-3), exchange=ExchangeConfig(
+        sparse_as_dense=True, reduce_scatter=True, codec="bf16",
+        fusion_threshold=1 << 20))
+    assert old.exchange_config == new.exchange_config
+    assert old.plan(tree) is new.plan(tree)        # identical cached plan
+    with pytest.warns(DeprecationWarning):
+        hier = DistributedOptimizer(adamw(1e-3), hierarchical=True)
+    assert hier.exchange_config.backend == "hierarchical"
+    # mixing both styles is an error, as is an unknown kwarg
+    with pytest.raises(TypeError):
+        DistributedOptimizer(adamw(1e-3), exchange=ExchangeConfig(),
+                             sparse_as_dense=True)
+    with pytest.raises(TypeError):
+        DistributedOptimizer(adamw(1e-3), sparse_az_dense=True)
+    # no warning for pure new-style construction
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        DistributedOptimizer(adamw(1e-3), exchange=ExchangeConfig())
+        DistributedOptimizer(adamw(1e-3))
+
+
+def test_exchange_config_normalises_deprecated_fields():
+    assert ExchangeConfig(wire_dtype="bf16") == ExchangeConfig(codec="bf16")
+    assert ExchangeConfig(hierarchical=True) == \
+        ExchangeConfig(backend="hierarchical")
+    with pytest.raises(ValueError):
+        ExchangeConfig(wire_dtype="bf16", codec="int8")
+    with pytest.raises(ValueError):
+        ExchangeConfig(hierarchical=True, backend="ringsim")
+
+
+def test_describe_and_stats_name_codec_and_backend():
+    tree = _demo_tree()
+    opt = DistributedOptimizer(adamw(1e-3), exchange=ExchangeConfig(
+        sparse_as_dense=True, codec="int8", backend="ringsim"))
+    stats = opt.exchange_stats(tree, n_workers=8)
+    assert "codec:int8" in stats.strategy
+    assert "backend:ringsim" in stats.strategy
+    table = opt.plan(tree).describe()
+    assert "int8" in table and "ringsim" in table
+    # bf16 and int8 runs must be distinguishable in benchmark CSVs
+    bf = DistributedOptimizer(adamw(1e-3), exchange=ExchangeConfig(
+        sparse_as_dense=True, codec="bf16"))
+    assert bf.exchange_stats(tree, 8).strategy != stats.strategy
 
 
 # ---------------------------------------------------------------------------
@@ -486,6 +679,172 @@ def test_plan_collective_count_matches_lowered_hlo():
     assert "OK" in out
 
 
+def test_plan_equals_eager_for_every_codec_backend_pair():
+    """Acceptance: the planned exchange matches the eager dense-reduce
+    reference for EVERY (codec, backend) pair in the registries, under
+    shard_map, within each codec's tolerance — and the lowered HLO
+    contains exactly ``plan.hlo_collectives(P)`` collective ops."""
+    out = run_with_devices(textwrap.dedent("""
+        import functools
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh, PartitionSpec as P
+        from jax.experimental.shard_map import shard_map
+        from repro.core import (DistributedOptimizer, ExchangeConfig,
+                                IndexedSlices, available_backends,
+                                available_codecs)
+        from repro.launch import hlo as hlo_lib
+        from repro.optim import adamw
+
+        V, D, N = 32, 16, 10
+        P_ = len(jax.devices())
+        rng = np.random.default_rng(0)
+        idx = jnp.asarray(rng.integers(0, V, (P_, N), dtype=np.int32))
+        vals = jnp.asarray(rng.standard_normal((P_, N, D)), jnp.float32)
+        dense = jnp.asarray(rng.standard_normal((P_, V, D)), jnp.float32)
+        w = jnp.asarray(rng.standard_normal((P_, 37)), jnp.float32)
+
+        def f(i, v, d, ww, opt):
+            g = {'e': [IndexedSlices(i[0], v[0], (V, D)), d[0]],
+                 'w': ww[0]}
+            out = opt.exchange(g)
+            return out['e'][None], out['w'][None]
+
+        def run(opt, mesh, spec):
+            sm = jax.jit(shard_map(functools.partial(f, opt=opt),
+                                   mesh=mesh, in_specs=(spec,) * 4,
+                                   out_specs=spec, check_rep=False))
+            hlo = sm.lower(idx, vals, dense, w).compile().as_text()
+            e, ww = sm(idx, vals, dense, w)
+            return np.asarray(e)[0], np.asarray(ww)[0], hlo
+
+        flat = Mesh(np.array(jax.devices()), ('data',))
+        ref = DistributedOptimizer(
+            adamw(1e-3), exchange=ExchangeConfig(sparse_as_dense=True),
+            axis_name=('data',))
+        e_ref, w_ref, _ = run(ref, flat, P('data'))
+        tols = {'identity': 1e-5, 'bf16': 2e-2, 'f16': 2e-2,
+                'int8': 2e-2}
+
+        n_pairs = 0
+        for codec in available_codecs():
+            for be in available_backends():
+                if be == 'hierarchical':
+                    mesh = Mesh(np.array(jax.devices()).reshape(2, 4),
+                                ('pod', 'data'))
+                    axis, spec = ('pod', 'data'), P(('pod', 'data'))
+                    workers = (2, 4)
+                else:
+                    mesh, axis, spec, workers = (flat, ('data',),
+                                                 P('data'), P_)
+                opt = DistributedOptimizer(
+                    adamw(1e-3),
+                    exchange=ExchangeConfig(sparse_as_dense=True,
+                                            codec=codec, backend=be,
+                                            fusion_threshold=1 << 20),
+                    axis_name=axis)
+                e, ww, hlo = run(opt, mesh, spec)
+                err = max(np.abs(e - e_ref).max(),
+                          np.abs(ww - w_ref).max())
+                assert err < tols[codec], (codec, be, err)
+                plan = opt.plan({'e': [IndexedSlices(idx[0], vals[0],
+                                                     (V, D)), dense[0]],
+                                 'w': w[0]})
+                counts = hlo_lib.count_collectives(hlo)
+                assert sum(counts.values()) == \
+                    plan.hlo_collectives(workers), (codec, be, counts)
+                n_pairs += 1
+        assert n_pairs >= 9, n_pairs
+        print('PAIRS_OK', n_pairs)
+    """))
+    assert "PAIRS_OK" in out
+
+
+def test_broadcast_params_backend_hot_swap_across_workers():
+    """Serving weight hot-swap: params broadcast from worker 0 through
+    the plan bucketing lands on every worker, for a codec/backend mix."""
+    out = run_with_devices(textwrap.dedent("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh, PartitionSpec as P
+        from jax.experimental.shard_map import shard_map
+        from repro.serving import broadcast_params, broadcast_plan
+
+        rng = np.random.default_rng(0)
+        params = {'w1': jnp.asarray(rng.standard_normal((32, 16)),
+                                    jnp.float32),
+                  'w2': jnp.asarray(rng.standard_normal((7,)),
+                                    jnp.float32)}
+        stale = jax.tree_util.tree_map(jnp.zeros_like, params)
+        mesh = Mesh(np.array(jax.devices()), ('data',))
+        P_ = len(jax.devices())
+        flags = jnp.asarray([1] + [0] * (P_ - 1), jnp.int32)[:, None]
+
+        for codec, be in [('identity', 'jax'), ('bf16', 'ringsim'),
+                          ('int8', 'jax')]:
+            plan = broadcast_plan(params, codec=codec, backend=be)
+            def f(root_flag, fresh, stale):
+                mine = jax.tree_util.tree_map(
+                    lambda a, b: jnp.where(root_flag[0] > 0, a, b),
+                    fresh, stale)
+                out = broadcast_params(mine, plan=plan,
+                                       axis_name=('data',))
+                return jax.tree_util.tree_map(lambda x: x[None], out)
+            sm = jax.jit(shard_map(f, mesh=mesh,
+                                   in_specs=(P('data'), P(), P()),
+                                   out_specs=P('data'), check_rep=False))
+            got = sm(flags, params, stale)
+            tol = {'identity': 0.0, 'bf16': 2e-2, 'int8': 2e-2}[codec]
+            for k in params:
+                g = np.asarray(got[k])
+                want = np.broadcast_to(np.asarray(params[k])[None],
+                                       g.shape)
+                assert np.abs(g - want).max() <= tol, (codec, be, k)
+        print('OK')
+    """))
+    assert "OK" in out
+
+
+def test_broadcast_params_rejects_codec_backend_plan_mismatch():
+    from repro.serving import broadcast_params, broadcast_plan
+    params = {"w": jnp.ones((8, 8), jnp.float32)}
+    plan = broadcast_plan(params, codec="int8")
+    with pytest.raises(ValueError):
+        broadcast_params(params, plan=plan, codec="identity")
+    with pytest.raises(ValueError):
+        broadcast_params(params, plan=plan, backend="ringsim")
+    out = broadcast_params(params, plan=plan)          # local round-trip
+    assert float(jnp.abs(out["w"] - params["w"]).max()) <= 1.0 / 127
+
+
+def test_int8_codec_n_collectives_counts_values_and_scales():
+    tree = {"a": jnp.ones((16, 16), jnp.float32),
+            "b": jnp.ones((4, 4), jnp.float32)}
+    lin = compile_plan(tree, ExchangeConfig(sparse_as_dense=True))
+    q8 = compile_plan(tree, ExchangeConfig(sparse_as_dense=True,
+                                           codec="int8"))
+    assert lin.n_collectives == 2              # one psum per bucket
+    assert q8.n_collectives == 4               # values + scales each
+    assert q8.hlo_collectives(8) == 4
+
+
+def test_gspmd_audit_backend_reports_compiler_collectives():
+    """ROADMAP item: the exchange audit runs on the GSPMD (non-shard_map)
+    path and the partitioner's chosen collectives are reported next to
+    the plan's schedule."""
+    out = run_with_devices(textwrap.dedent("""
+        from repro.launch.dryrun import audit_exchange_gspmd
+        r = audit_exchange_gspmd(arch='transformer-big', n_workers=8)
+        assert r['audit_mode'] == 'gspmd', r
+        assert r['collectives_found'], r
+        assert r['counts_match'], r
+        # on the reduced config the partitioner picks exactly the
+        # planned per-leaf all-reduces
+        assert r['collective_delta'] == 0, r
+        assert abs(r['wire_ratio'] - 1.0) < 1e-6, r
+        print('OK')
+    """), n=8)
+    assert "OK" in out
+
+
 @pytest.mark.slow
 def test_dryrun_exchange_audit_reduced_transformer_big():
     """Acceptance: the full audit on the reduced transformer-big config
@@ -500,6 +859,12 @@ def test_dryrun_exchange_audit_reduced_transformer_big():
                                  sparse_as_dense=False)
         assert r2['counts_match'], r2
         assert abs(r2['wire_ratio'] - 1.0) < 1e-6, r2
+        # acceptance: int8 codec on the hierarchical backend — planned
+        # wire must match the codec's accounting exactly
+        r3 = audit_exchange_plan(arch='transformer-big', n_workers=8,
+                                 codec='int8', backend='hierarchical')
+        assert r3['counts_match'], r3
+        assert abs(r3['wire_ratio'] - 1.0) < 1e-6, r3
         print('OK')
     """), n=8)
     assert "OK" in out
