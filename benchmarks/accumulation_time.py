@@ -84,6 +84,37 @@ _DIST_CODE = textwrap.dedent("""
     print('WIRE_REDUCE', wire['reduce'])
     print('WIRE_RSBF16', wire['rs_bf16'])
     print('WIRE_INT8', wire['int8'])
+
+    # overlap column: the SAME dense-reduce exchange on a multi-bucket
+    # tree (the embedding + 8 projection chunks), fused serial schedule
+    # vs the staged BucketSchedule (launch-all-then-unpack)
+    n_chunk = 8
+    ws = jnp.asarray(rng.standard_normal((P_, n_chunk, 512, 256)),
+                     jnp.float32)
+
+    def step_multi(i, v, d, w, opt):
+        g = {'emb': [IndexedSlices(i[0], v[0], (V, D)), d[0]]}
+        for k in range(n_chunk):
+            g['w%d' % k] = w[0, k]
+        return opt.exchange(g)['emb'][None]
+
+    for name, ov in (('fused_multi', False), ('overlap_multi', True)):
+        opt = DistributedOptimizer(
+            adamw(1e-3),
+            exchange=ExchangeConfig(sparse_as_dense=True, overlap=ov),
+            axis_name=('data',))
+        sm = jax.jit(shard_map(functools.partial(step_multi, opt=opt),
+                               mesh=mesh, in_specs=(P('data'),) * 4,
+                               out_specs=P('data'), check_rep=False))
+        r = sm(idx, vals, dense, ws); jax.block_until_ready(r)
+        ts = []
+        for _ in range(3):
+            t0 = time.perf_counter()
+            jax.block_until_ready(sm(idx, vals, dense, ws))
+            ts.append(time.perf_counter() - t0)
+        out[name] = sorted(ts)[1]
+    print('FUSEDMULTI_US', out['fused_multi'] * 1e6)
+    print('OVERLAPMULTI_US', out['overlap_multi'] * 1e6)
 """)
 
 
@@ -112,6 +143,13 @@ def run(emit):
              f"reduce{grab('WIRE_REDUCE')/1e6:.0f}MB_"
              f"rs_bf16{grab('WIRE_RSBF16')/1e6:.0f}MB_"
              f"int8{grab('WIRE_INT8')/1e6:.0f}MB")
+        fm, om = grab("FUSEDMULTI_US"), grab("OVERLAPMULTI_US")
+        emit("fig5_time_fused_multibucket_P8", fm,
+             "serial_schedule_9buckets")
+        emit("fig5_time_overlap_multibucket_P8", om,
+             "staged_schedule_9buckets")
+        emit("fig5_time_overlap_ratio_P8", 0.0,
+             f"{fm/max(om, 1e-9):.2f}x_fused_over_staged")
 
     # densify kernel: Pallas (interpret) vs XLA scatter oracle
     rng = np.random.default_rng(0)

@@ -1,0 +1,120 @@
+"""Overlap scheduling: exposed vs hidden communication time.
+
+The staged BucketSchedule (``ExchangeConfig(overlap=True)``) launches
+every bucket's collective — in reverse-layer readiness order — before
+any bucket unpacks, so collectives can hide behind the remaining
+accumulation/pack compute.  This benchmark measures, on 8 emulated CPU
+workers with the REDUCED transformer-big gradient tree (the paper's
+arch, the acceptance config):
+
+  * ``compute_only``   — plan accumulation + densify, no collectives;
+  * ``fused``          — the serial pack -> collective -> unpack loop;
+  * ``overlap``        — the staged launch-all-then-unpack schedule;
+
+and reports ``exposed_comm = exchange - compute_only`` for each
+schedule.  On shared-memory CPU "interconnect" the hidden fraction is
+modest; what must hold is that overlap never ADDS collectives (the
+schedule is a pure reordering — asserted by the dry-run audit) and the
+exposed-communication accounting is reported machine-readably for the
+perf trajectory.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_DIST_CODE = textwrap.dedent("""
+    import functools, time
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import Mesh, PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+    from repro.configs import get_config
+    from repro.core import DistributedOptimizer, ExchangeConfig
+    from repro.data import make_pipeline
+    from repro.models import build_model
+    from repro.optim import adamw
+    from repro.training.gradients import grad_contributions
+
+    cfg = get_config('transformer-big').reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    pipe = make_pipeline(cfg, batch_per_host=2, seq_len=32)
+    batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(0).items()}
+    grads, _, _ = grad_contributions(model, params, batch,
+                                     sparse_embedding=True)
+
+    mesh = Mesh(np.array(jax.devices()), ('data',))
+
+    def timed(fn, *args, iters=5):
+        jax.block_until_ready(fn(*args))          # compile + warm
+        jax.block_until_ready(fn(*args))
+        ts = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            ts.append(time.perf_counter() - t0)
+        return sorted(ts)[len(ts) // 2] * 1e6
+
+    results = {}
+    n_stages = None
+    for name, overlap in (('fused', False), ('overlap', True)):
+        opt = DistributedOptimizer(
+            adamw(1e-3),
+            exchange=ExchangeConfig(sparse_as_dense=True,
+                                    overlap=overlap),
+            axis_name=('data',))
+        plan = opt.plan(grads)
+        n_stages = plan.schedule.n_stages
+        sm = jax.jit(shard_map(opt.exchange, mesh=mesh, in_specs=(P(),),
+                               out_specs=P(), check_rep=False))
+        results[name] = timed(sm, grads)
+        if name == 'fused':
+            # accumulation + densify only: the same plan with every
+            # collective degraded to a no-op (local path) — the compute
+            # floor both schedules share
+            acc = jax.jit(shard_map(plan.accumulate_tree, mesh=mesh,
+                                    in_specs=(P(),), out_specs=P(),
+                                    check_rep=False))
+            results['compute_only'] = timed(acc, grads)
+
+    print('N_STAGES', n_stages)
+    print('COMPUTE_US', results['compute_only'])
+    print('FUSED_US', results['fused'])
+    print('OVERLAP_US', results['overlap'])
+""")
+
+
+def run(emit):
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=os.path.join(REPO, "src"))
+    res = subprocess.run([sys.executable, "-c", _DIST_CODE], env=env,
+                         capture_output=True, text=True, timeout=560)
+    if res.returncode != 0:
+        emit("overlap_error", 0.0, res.stderr[-120:].replace(
+            ",", ";").replace("\n", "|"))
+        return
+
+    def grab(tag):
+        return float(res.stdout.split(tag)[1].split()[0])
+
+    comp, fused, over = (grab("COMPUTE_US"), grab("FUSED_US"),
+                         grab("OVERLAP_US"))
+    n_stages = int(grab("N_STAGES"))
+    emit("overlap_compute_only_P8", comp,
+         "accumulate+densify_no_collectives")
+    emit("overlap_exchange_fused_P8", fused,
+         f"serial_schedule_{n_stages}stages")
+    emit("overlap_exchange_staged_P8", over,
+         f"launch_all_then_unpack_{n_stages}stages")
+    emit("overlap_exposed_comm_fused_P8", max(fused - comp, 0.0),
+         "exchange_minus_compute")
+    emit("overlap_exposed_comm_staged_P8", max(over - comp, 0.0),
+         "exchange_minus_compute")
+    hidden = (fused - over) / max(fused - comp, 1e-9)
+    emit("overlap_hidden_fraction_P8", 0.0,
+         f"{hidden:.3f}_of_exposed_comm_hidden_cpu_smem")

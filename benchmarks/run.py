@@ -2,6 +2,10 @@
 # CSV rows (benchmark harness entrypoint — deliverable d).
 #
 #   PYTHONPATH=src python -m benchmarks.run [--only fig3,...] [--fast]
+#       [--json]
+#
+# ``--json`` additionally writes one machine-readable ``BENCH_<name>.json``
+# per module (the perf-trajectory artifact CI uploads).
 #
 # Modules (paper artifact -> module):
 #   Fig 3 / Fig 5 space : accumulation_memory
@@ -10,7 +14,9 @@
 #   Figs 9/10/11        : strong_scaling
 #   Fig 12              : quality_invariance
 #   §Roofline           : roofline  (aggregates experiments/dryrun)
+#   §Overlap            : overlap   (exposed vs hidden communication time)
 import argparse
+import json
 import sys
 import time
 
@@ -21,18 +27,25 @@ def main() -> None:
                     help="comma-separated module substrings to run")
     ap.add_argument("--fast", action="store_true",
                     help="skip the (slow) training-based Fig 12 benchmark")
+    ap.add_argument("--json", action="store_true",
+                    help="write BENCH_<module>.json next to the CSV "
+                         "output (machine-readable results)")
+    ap.add_argument("--json-dir", default=".",
+                    help="directory for the BENCH_<module>.json files")
     args = ap.parse_args()
 
     from benchmarks import (accumulation_memory, accumulation_time,
-                            weak_scaling, strong_scaling, roofline)
+                            overlap, weak_scaling, strong_scaling,
+                            roofline)
     modules = [("accumulation_memory", accumulation_memory),
                ("accumulation_time", accumulation_time),
+               ("overlap", overlap),
                ("weak_scaling", weak_scaling),
                ("strong_scaling", strong_scaling),
                ("roofline", roofline)]
     if not args.fast:
         from benchmarks import quality_invariance
-        modules.insert(4, ("quality_invariance", quality_invariance))
+        modules.insert(5, ("quality_invariance", quality_invariance))
     if args.only:
         keys = args.only.split(",")
         modules = [(n, m) for n, m in modules
@@ -40,15 +53,26 @@ def main() -> None:
 
     print("name,us_per_call,derived")
 
-    def emit(name: str, us: float, derived: str) -> None:
-        print(f"{name},{us:.1f},{derived}")
-        sys.stdout.flush()
-
     for name, mod in modules:
+        rows = []
+
+        def emit(row_name: str, us: float, derived: str,
+                 _rows=rows) -> None:
+            print(f"{row_name},{us:.1f},{derived}")
+            sys.stdout.flush()
+            _rows.append({"name": row_name, "us_per_call": us,
+                          "derived": derived})
+
         t0 = time.perf_counter()
         mod.run(emit)
-        emit(f"_module_{name}_wall_s", (time.perf_counter() - t0) * 1e6,
-             "total")
+        wall_s = time.perf_counter() - t0
+        emit(f"_module_{name}_wall_s", wall_s * 1e6, "total")
+        if args.json:
+            import os
+            path = os.path.join(args.json_dir, f"BENCH_{name}.json")
+            with open(path, "w") as f:
+                json.dump({"module": name, "wall_s": wall_s,
+                           "rows": rows}, f, indent=2)
 
 
 if __name__ == '__main__':

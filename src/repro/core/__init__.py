@@ -15,7 +15,8 @@ from repro.core.codecs import (WireCodec, available_codecs, get_codec,
                                register_codec)
 from repro.core.backend import (CollectiveBackend, available_backends,
                                 get_backend, register_backend)
-from repro.core.exchange import (ExchangeConfig, ExchangePlan, compile_plan,
+from repro.core.exchange import (BucketSchedule, BucketStage, ExchangeConfig,
+                                 ExchangePlan, compile_plan,
                                  plan_cache_info, clear_plan_cache)
 from repro.core.dist_opt import DistributedOptimizer, ExchangeStats
 from repro.core import backend, codecs, comm, exchange, fusion

@@ -37,7 +37,9 @@ import jax
 import jax.numpy as jnp
 
 _DTYPE_ALIASES = {"bf16": "bfloat16", "f32": "float32", "fp32": "float32",
-                  "f16": "float16", "fp16": "float16"}
+                  "f16": "float16", "fp16": "float16",
+                  "f8e4m3": "float8_e4m3fn", "fp8e4m3": "float8_e4m3fn",
+                  "f8e5m2": "float8_e5m2", "fp8e5m2": "float8_e5m2"}
 
 
 def canonical_dtype(name) -> Optional[str]:
@@ -182,6 +184,19 @@ register_codec(IdentityCodec())
 register_codec(CastCodec("bfloat16", name="bf16"))
 register_codec(CastCodec("float16", name="f16"))
 register_codec(Int8Codec())
+
+# fp8 wires on the same cast-codec path: e4m3 (3 mantissa bits, range
+# ±448 — the gradient default) and e5m2 (2 mantissa bits, range ±57344 —
+# fp16-like dynamic range for loss-scaled training).  Like bf16 these
+# are LINEAR: the encoded buffer sums in flight, quartering the f32
+# wire with no side scales.  Gated on the installed jax exposing native
+# float8 dtypes (ml_dtypes); absent, the names simply don't register.
+for _f8_name, _f8_dtype in (("f8e4m3", "float8_e4m3fn"),
+                            ("f8e5m2", "float8_e5m2")):
+    try:
+        register_codec(CastCodec(_f8_dtype, name=_f8_name))
+    except (TypeError, ValueError):          # no fp8 support in this jax
+        pass
 
 
 def available_codecs() -> Tuple[str, ...]:

@@ -52,12 +52,30 @@ class ExchangeStats:
     Derived entirely from the ExchangePlan — the same numbers the
     runtime collectives move.  ``strategy`` names the accumulation rule
     AND the active codec/backend, so benchmark CSVs distinguish bf16
-    from int8 runs and flat from hierarchical/ring exchanges.
+    from int8 runs and flat from hierarchical/ring exchanges.  The
+    schedule fields mirror the plan's ``BucketSchedule`` so dry-run
+    output explains what will actually run per stage.
     """
     accumulated_bytes: int       # size of accumulated representation
     wire_bytes: int              # bytes moved by the collective (per worker)
     n_collectives: int
     strategy: str
+    n_stages: int = 1            # BucketSchedule stages (1 bucket each)
+    overlap: bool = False        # staged launch-all-then-unpack schedule?
+    schedule_table: str = ""     # plan.describe_schedule(n_workers)
+
+    def describe(self) -> str:
+        """One-look summary of what the exchange will actually run:
+        strategy, totals, and the per-stage BucketSchedule."""
+        head = (f"exchange: strategy={self.strategy} "
+                f"collectives={self.n_collectives} "
+                f"wire_bytes/worker={self.wire_bytes} "
+                f"accumulated_bytes={self.accumulated_bytes} "
+                f"stages={self.n_stages} "
+                f"overlap={'on' if self.overlap else 'off'}")
+        if self.schedule_table:
+            return head + "\n" + self.schedule_table
+        return head
 
 
 class DistributedOptimizer:
@@ -125,9 +143,25 @@ class DistributedOptimizer:
         return self.plan(grads).accumulate_tree(grads)
 
     def exchange(self, grads):
-        """Steps 1-3: accumulate, cross-worker exchange, densify."""
+        """Steps 1-3: accumulate, cross-worker exchange, densify.
+        Honours ``exchange_config.overlap`` (staged vs fused)."""
         return self.plan(grads).execute(grads, self.axis_name,
                                         average=self.average)
+
+    def exchange_scheduled(self, grads):
+        """Staged exchange, regardless of ``overlap``: every stage's
+        collective launches (in reverse-layer readiness order,
+        interleaved with the per-stage accumulation/pack compute)
+        before any stage unpacks — the overlap path the training stack
+        consumes on the final microbatch."""
+        return self.plan(grads).execute_scheduled(grads, self.axis_name,
+                                                  average=self.average)
+
+    def exchange_fused(self, grads):
+        """Serial reference path: each bucket finishes before the next
+        launches (regardless of ``overlap``)."""
+        return self.plan(grads).execute_fused(grads, self.axis_name,
+                                              average=self.average)
 
     def broadcast(self, tree, root: int = 0):
         """Broadcast a (dense) pytree from worker ``root`` through the
@@ -147,8 +181,13 @@ class DistributedOptimizer:
             strategy += f"+codec:{cfg.codec}"
         if cfg.backend != "jax":
             strategy += f"+backend:{cfg.backend}"
+        if cfg.overlap:
+            strategy += "+overlap"
         return ExchangeStats(
             accumulated_bytes=plan.buffer_bytes(n_workers),
             wire_bytes=plan.wire_bytes(n_workers),
             n_collectives=plan.n_collectives,
-            strategy=strategy)
+            strategy=strategy,
+            n_stages=plan.schedule.n_stages,
+            overlap=cfg.overlap,
+            schedule_table=plan.describe_schedule(n_workers))

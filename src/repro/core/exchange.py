@@ -28,12 +28,21 @@ compiles the whole decision ONCE per gradient-tree structure:
   5. lower every bucket collective through a registered
      **CollectiveBackend** (``repro.core.backend``): flat jax
      collectives, the hierarchical per-mesh-axis psum, or the
-     ppermute-based ring simulation.
+     ppermute-based ring simulation;
+  6. compile a **BucketSchedule**: one stage per bucket (``pack ->
+     collective -> unpack``) carrying its readiness key (the leaf set
+     it consumes), sorted reverse-layer so the bucket whose gradients
+     finalise earliest in backward launches first.  ``execute`` runs
+     the stages serially (fused); ``execute_scheduled`` /
+     ``ExchangeConfig(overlap=True)`` launches every stage's collective
+     before any unpack, interleaved with the remaining
+     accumulation/pack compute, so collectives hide behind compute.
 
 The plan is cached on (treedef, contribution shapes/dtypes, config) and
 is the single source of truth for ``wire_bytes`` / ``buffer_bytes`` /
-``n_collectives`` consumed by the optimizer, the launchers' collective
-audit, the benchmarks, and the roofline/scaling models.
+``n_collectives`` (sums of the schedule's per-stage accounting)
+consumed by the optimizer, the launchers' collective audit, the
+benchmarks, and the roofline/scaling models.
 """
 from __future__ import annotations
 
@@ -78,6 +87,10 @@ class ExchangeConfig:
     backend: str = "jax"                 # CollectiveBackend registry name
     hierarchy_levels: int = 2            # mesh axes a hierarchical plan spans
     use_kernel: bool = False             # Pallas densify/quantize kernels
+    overlap: bool = False                # staged schedule: launch every
+    #                                      bucket collective before any
+    #                                      unpack, interleaved with the
+    #                                      remaining accumulation compute
     # -- deprecated spellings, folded into codec/backend ---------------------
     wire_dtype: Optional[str] = None     # -> codec=<cast codec>
     hierarchical: bool = False           # -> backend="hierarchical"
@@ -293,6 +306,44 @@ class DenseBucket:
 
 
 @dataclasses.dataclass(frozen=True)
+class BucketStage:
+    """One independently launchable schedule unit: ``pack -> collective
+    -> unpack`` for a single bucket.
+
+    ``leaf_ids`` is the stage's READINESS KEY: the set of grad-tree
+    leaves this bucket consumes.  Backward produces leaves in reverse
+    flatten order (output head first), so the stage becomes launchable
+    once its *smallest* leaf id has been emitted — ``ready_key`` orders
+    the schedule accordingly.
+    """
+    kind: str                    # "dense" | "gather"
+    bucket_id: int               # index into plan.dense_buckets, or the
+    #                              gathered leaf id itself
+    leaf_ids: Tuple[int, ...]    # readiness key: leaves this stage needs
+
+    @property
+    def ready_key(self) -> int:
+        return min(self.leaf_ids)
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketSchedule:
+    """Dependency-ordered stage list for one plan.
+
+    Stages are sorted reverse-layer (descending ``ready_key``): the
+    bucket whose leaves finalise earliest in the backward pass launches
+    first, so its collective is in flight while later stages are still
+    accumulating/packing.  Every bucket is exactly one stage; leaf sets
+    partition the grad tree.
+    """
+    stages: Tuple[BucketStage, ...]
+
+    @property
+    def n_stages(self) -> int:
+        return len(self.stages)
+
+
+@dataclasses.dataclass(frozen=True)
 class ExchangePlan:
     """Static schedule for one gradient-tree structure."""
     treedef: Any
@@ -302,6 +353,7 @@ class ExchangePlan:
     dense_buckets: Tuple[DenseBucket, ...]
     gather_leaf_ids: Tuple[int, ...]
     config: ExchangeConfig
+    schedule: BucketSchedule
 
     # -- static accounting ---------------------------------------------------
     @property
@@ -314,20 +366,53 @@ class ExchangePlan:
 
     @property
     def n_collectives(self) -> int:
-        """Logical collective launches (P-independent)."""
+        """Logical collective launches (P-independent) — the sum of the
+        schedule's per-stage counts, so staged and fused execution bill
+        identically by construction."""
+        return sum(self.stage_collectives(s) for s in self.schedule.stages)
+
+    # -- per-stage accounting (the BucketSchedule contract) ------------------
+    def stage_collectives(self, stage: BucketStage) -> int:
+        """Logical collectives one stage launches (P-independent)."""
         if not self.config.codec_obj.linear:
             # non-linear codecs never reduce in flight: every bucket is
             # one values allgather + one scales allgather, whatever its
             # nominal kind or backend (same convention that bills RS+AG
             # as 2)
-            return 2 * (len(self.dense_buckets)
-                        + len(self.gather_leaf_ids))
+            return 2
         be = self.config.backend_obj
         nl = self.config.hierarchy_levels
-        n = sum(be.logical_collectives(b.collective, nl)
-                for b in self.dense_buckets)
-        return n + len(self.gather_leaf_ids) * be.logical_collectives(
-            ALLGATHER, nl)
+        if stage.kind == "dense":
+            return be.logical_collectives(
+                self.dense_buckets[stage.bucket_id].collective, nl)
+        return be.logical_collectives(ALLGATHER, nl)
+
+    def stage_wire_bytes(self, stage: BucketStage,
+                         n_workers: Union[int, Sequence[int]]) -> int:
+        """Bytes one stage moves per worker."""
+        levels = self._levels(n_workers)
+        be = self.config.backend_obj
+        if stage.kind == "dense":
+            b = self.dense_buckets[stage.bucket_id]
+            return be.dense_wire_bytes(b.collective, b.n_elems,
+                                       b.wire_dtype, self.config.codec_obj,
+                                       levels)
+        return be.gather_wire_bytes(
+            self._gather_payload_bytes(self.leaf_specs[stage.bucket_id]),
+            levels)
+
+    def stage_hlo_collectives(self, stage: BucketStage,
+                              n_workers: Union[int, Sequence[int]]) -> int:
+        """Collective ops one stage lowers to in the compiled HLO."""
+        levels = self._levels(n_workers)
+        be = self.config.backend_obj
+        codec = self.config.codec_obj
+        if stage.kind == "dense":
+            return be.hlo_ops_dense(
+                self.dense_buckets[stage.bucket_id].collective, codec,
+                levels)
+        n_tensors = 2 + (0 if codec.linear else 1)
+        return be.hlo_ops_gather(n_tensors, levels)
 
     def _wire_dtype_for(self, spec: LeafSpec) -> str:
         return self.config.codec_obj.wire_dtype(spec.dtype)
@@ -353,22 +438,14 @@ class ExchangePlan:
     def wire_bytes(self, n_workers: Union[int, Sequence[int]]) -> int:
         """Bytes moved per worker per step — the single source of truth
         shared by the benchmarks, the roofline model and the dry-run
-        collective audit.  Delegates per bucket to the configured
-        backend's accounting with the configured codec's payload sizes.
-        Hierarchical plans require ``n_workers`` as a per-level tuple
-        (e.g. ``(n_pods, workers_per_pod)``) matching
+        collective audit.  The sum of the schedule's per-stage bytes
+        (each stage delegates to the configured backend's accounting
+        with the configured codec's payload sizes).  Hierarchical plans
+        require ``n_workers`` as a per-level tuple (e.g.
+        ``(n_pods, workers_per_pod)``) matching
         ``config.hierarchy_levels``."""
-        levels = self._levels(n_workers)
-        be = self.config.backend_obj
-        codec = self.config.codec_obj
-        total = 0
-        for b in self.dense_buckets:
-            total += be.dense_wire_bytes(b.collective, b.n_elems,
-                                         b.wire_dtype, codec, levels)
-        for i in self.gather_leaf_ids:
-            total += be.gather_wire_bytes(
-                self._gather_payload_bytes(self.leaf_specs[i]), levels)
-        return total
+        return sum(self.stage_wire_bytes(s, n_workers)
+                   for s in self.schedule.stages)
 
     def hlo_collectives(self, n_workers: Union[int, Sequence[int]]) -> int:
         """Exact collective-op count in the lowered HLO (the dry-run
@@ -376,14 +453,8 @@ class ExchangePlan:
         several ops (per-axis psums, ring ppermute hops) and one gather
         bucket lowers to one all-gather per exchanged tensor (indices +
         values [+ codec scales])."""
-        levels = self._levels(n_workers)
-        be = self.config.backend_obj
-        codec = self.config.codec_obj
-        n = sum(be.hlo_ops_dense(b.collective, codec, levels)
-                for b in self.dense_buckets)
-        n_tensors = 2 + (0 if codec.linear else 1)
-        return n + len(self.gather_leaf_ids) * be.hlo_ops_gather(
-            n_tensors, levels)
+        return sum(self.stage_hlo_collectives(s, n_workers)
+                   for s in self.schedule.stages)
 
     def buffer_bytes(self, n_workers: Union[int, Sequence[int]]) -> int:
         """Size of the accumulated representation each worker holds after
@@ -442,17 +513,32 @@ class ExchangePlan:
                          f"| {self._wire_dtype_for(s)} |")
         return "\n".join(lines)
 
+    def describe_schedule(self, n_workers: Union[int, Sequence[int], None]
+                          = None) -> str:
+        """Human-readable BucketSchedule: stage launch order, readiness
+        keys, per-stage collectives (and wire bytes when ``n_workers``
+        is given) — what a dry-run / trainer will actually run."""
+        sch = self.schedule
+        mode = "overlap" if self.config.overlap else "fused"
+        lines = [f"schedule: {sch.n_stages} stages ({mode}), launch "
+                 f"order reverse-layer (descending readiness key)"]
+        for k, st in enumerate(sch.stages):
+            wire = ""
+            if n_workers is not None:
+                wire = f", {self.stage_wire_bytes(st, n_workers)} wire B"
+            lines.append(
+                f"  stage {k}: {st.kind} bucket {st.bucket_id}, "
+                f"{len(st.leaf_ids)} leaves (ready@{st.ready_key}), "
+                f"{self.stage_collectives(st)} collectives{wire}")
+        return "\n".join(lines)
+
     # -- execution -----------------------------------------------------------
     def accumulate(self, grads) -> List[Any]:
         """Step 1 at runtime: per-leaf accumulation to the classified
         representation (dense leaves may come back ``_Pending``)."""
-        leaves, treedef = jax.tree_util.tree_flatten(grads,
-                                                     is_leaf=_is_leaf)
-        if treedef != self.treedef:
-            raise ValueError(f"grad tree structure changed: {treedef} "
-                             f"!= planned {self.treedef}")
         return [_accumulate_leaf(leaf, spec, self.config)
-                for leaf, spec in zip(leaves, self.leaf_specs)]
+                for leaf, spec in zip(self._flatten_checked(grads),
+                                      self.leaf_specs)]
 
     def accumulate_tree(self, grads):
         """Step 1 as a public pytree: dense-destined leaves fully
@@ -503,99 +589,191 @@ class ExchangePlan:
                 f"mesh axes but got axis_name={axis_name!r}")
         return axes
 
-    def _exchange_gather_leaf(self, s: IndexedSlices, spec: SparseSpec,
-                              axes: Tuple[str, ...], p: int
-                              ) -> IndexedSlices:
-        """Allgather one IndexedSlices leaf through the codec/backend:
-        only the WIRE is narrow — values are decoded back to the leaf
-        dtype before the scatter-add so duplicate rows accumulate at
-        full precision."""
+    # -- staged execution primitives -----------------------------------------
+    def _launch_gather(self, stage: BucketStage, leaves: List[Any],
+                       axes: Tuple[str, ...]) -> Tuple:
+        """Issue one gather stage's collectives: encode the accumulated
+        IndexedSlices leaf and allgather (indices, wire [, scales]).
+        Only the WIRE is narrow — decode back to the leaf dtype happens
+        at finish, before the scatter-add, so duplicate rows accumulate
+        at full precision."""
+        s = leaves[stage.bucket_id]
         codec = self.config.codec_obj
         be = self.config.backend_obj
-        if codec.linear:
-            wire = codec.encode(s.values,
-                                use_kernel=self.config.use_kernel)[0]
-            if not axes:
-                return IndexedSlices(s.indices,
-                                     codec.decode(wire, None, spec.dtype),
-                                     s.dense_shape)
-            g_idx = be.all_gather(s.indices, axes)
-            g_vals = codec.decode(be.all_gather(wire, axes), None,
-                                  spec.dtype)
-            return IndexedSlices(g_idx, g_vals, s.dense_shape)
         wire, scale = codec.encode(s.values,
                                    use_kernel=self.config.use_kernel)
+        rows = s.values.shape[0]
         if not axes:
-            return IndexedSlices(s.indices,
-                                 codec.decode(wire, scale, spec.dtype),
-                                 s.dense_shape)
+            return (s.indices, wire, scale, rows)
         g_idx = be.all_gather(s.indices, axes)
         g_wire = be.all_gather(wire, axes)            # (p*rows, ...)
-        g_scales = be.all_gather(scale, axes)         # (p,)
-        rows = s.values.shape[0]
-        per = g_wire.astype(jnp.float32).reshape(
-            (p, rows) + g_wire.shape[1:])
-        per = per * g_scales.astype(jnp.float32).reshape(
-            (p,) + (1,) * (per.ndim - 1))
-        g_vals = per.reshape(g_wire.shape).astype(spec.dtype)
-        return IndexedSlices(g_idx, g_vals, s.dense_shape)
+        g_scales = (be.all_gather(scale, axes)        # (p,)
+                    if scale is not None else None)
+        return (g_idx, g_wire, g_scales, rows)
 
-    def _exchange_dense_bucket(self, bucket: DenseBucket, buf: jax.Array,
-                               axes: Tuple[str, ...], p: int) -> jax.Array:
-        """One bucket's collective through the codec/backend."""
+    def _finish_gather(self, stage: BucketStage, inflight: Tuple,
+                       out: List[Any], inv_scale, axes: Tuple[str, ...],
+                       p: int) -> None:
+        """Decode + densify one gathered leaf into ``out``."""
+        spec = self.leaf_specs[stage.bucket_id]
+        codec = self.config.codec_obj
+        g_idx, g_wire, g_scales, rows = inflight
+        if codec.linear or not axes:
+            g_vals = codec.decode(g_wire, g_scales, spec.dtype)
+        else:
+            # per-worker scales: decode each worker's chunk against its
+            # own absmax scale before the scatter-add
+            per = g_wire.astype(jnp.float32).reshape(
+                (p, rows) + g_wire.shape[1:])
+            per = per * g_scales.astype(jnp.float32).reshape(
+                (p,) + (1,) * (per.ndim - 1))
+            g_vals = per.reshape(g_wire.shape).astype(spec.dtype)
+        g = IndexedSlices(g_idx, g_vals, spec.dense_shape)
+        x = accumulation.densify(g, use_kernel=self.config.use_kernel)
+        x = x.astype(spec.dtype)
+        if inv_scale is not None:
+            x = x * inv_scale
+        out[stage.bucket_id] = x
+
+    def _launch_dense(self, stage: BucketStage, leaves: List[Any],
+                      axes: Tuple[str, ...], p: int) -> Tuple:
+        """Pack one dense bucket (densify fused) and issue its
+        collective(s).  Linear codecs return the fully reduced buffer;
+        non-linear codecs return the gathered (wire, scales) pair whose
+        decode-reduction happens at finish."""
+        bucket = self.dense_buckets[stage.bucket_id]
         codec = self.config.codec_obj
         be = self.config.backend_obj
+        buf = self.pack_bucket(bucket, leaves)
         if codec.linear:
             if not axes:
-                return buf
+                return (buf,)
             if bucket.collective == REDUCE_SCATTER:
                 pad = -len(buf) % p
                 if pad:
                     buf = jnp.pad(buf, (0, pad))
                 shard = be.reduce_scatter(buf, axes)
-                return be.all_gather(shard, axes)[:bucket.n_elems]
-            return be.all_reduce(buf, axes)
+                return (be.all_gather(shard, axes)[:bucket.n_elems],)
+            return (be.all_reduce(buf, axes),)
         # non-linear (quantised) codec: workers quantise against their
         # own absmax scale, so the wire cannot be reduced in flight —
-        # allgather (values, scales) and reduce after decode
+        # allgather (values, scales) and reduce after decode (at finish)
         wire, scale = codec.encode(buf, use_kernel=self.config.use_kernel)
         if not axes:
-            return codec.decode(wire, scale, jnp.float32)
-        g_wire = be.all_gather(wire, axes)
-        g_scales = be.all_gather(scale, axes)
-        return codecs.sum_decoded(codec, g_wire, g_scales, p, jnp.float32)
+            return (codec.decode(wire, scale, jnp.float32),)
+        return (be.all_gather(wire, axes), be.all_gather(scale, axes))
+
+    def _finish_dense(self, stage: BucketStage, inflight: Tuple,
+                      out: List[Any], inv_scale, axes: Tuple[str, ...],
+                      p: int) -> None:
+        """Reduce-after-decode (non-linear) + unpack one dense bucket."""
+        bucket = self.dense_buckets[stage.bucket_id]
+        codec = self.config.codec_obj
+        if codec.linear or not axes:
+            buf = inflight[0]
+        else:
+            buf = codecs.sum_decoded(codec, inflight[0], inflight[1], p,
+                                     jnp.float32)
+        self.unpack_bucket(bucket, buf, out, inv_scale)
+
+    def launch_stage(self, stage: BucketStage, leaves: List[Any],
+                     axes: Tuple[str, ...], p: int) -> Tuple:
+        """Pack + issue one stage's collective(s); returns the in-flight
+        payload ``finish_stage`` consumes.  ``leaves`` must hold the
+        accumulated representation for every id in ``stage.leaf_ids``."""
+        if stage.kind == "dense":
+            return self._launch_dense(stage, leaves, axes, p)
+        return self._launch_gather(stage, leaves, axes)
+
+    def finish_stage(self, stage: BucketStage, inflight: Tuple,
+                     out: List[Any], inv_scale, axes: Tuple[str, ...],
+                     p: int) -> None:
+        """Unpack one launched stage's results into ``out`` (decode,
+        densify gathers, upcast, apply gradient averaging)."""
+        if stage.kind == "dense":
+            self._finish_dense(stage, inflight, out, inv_scale, axes, p)
+        else:
+            self._finish_gather(stage, inflight, out, inv_scale, axes, p)
+
+    def _flatten_checked(self, grads) -> List[Any]:
+        leaves, treedef = jax.tree_util.tree_flatten(grads,
+                                                     is_leaf=_is_leaf)
+        if treedef != self.treedef:
+            raise ValueError(f"grad tree structure changed: {treedef} "
+                             f"!= planned {self.treedef}")
+        return leaves
+
+    def _exchange_setup(self, grads, axis_name: comm.AxisNames,
+                        average: bool):
+        leaves = self._flatten_checked(grads)
+        axes = self._check_axes(axis_name)
+        p = comm.axis_size(axes) if axes else 1
+        inv_scale = (1.0 / p) if average and axes else None
+        return leaves, axes, p, inv_scale
+
+    def _accumulate_stage(self, stage: BucketStage, raw: List[Any],
+                          acc: List[Any]) -> None:
+        """Per-stage accumulation: fold only this stage's leaves to
+        their classified representation (the deferred part of the
+        paper's step 1, interleaved with earlier stages' collectives
+        under the scheduled execution)."""
+        for i in stage.leaf_ids:
+            acc[i] = _accumulate_leaf(raw[i], self.leaf_specs[i],
+                                      self.config)
 
     def execute(self, grads, axis_name: comm.AxisNames,
                 average: bool = True):
-        """Steps 1-3: accumulate, exchange per the schedule, densify.
+        """Steps 1-3: accumulate, exchange per the BucketSchedule,
+        densify.  Honours ``config.overlap``: the staged path launches
+        every stage's collective before any unpack so collectives
+        overlap the remaining accumulation/pack compute; the fused path
+        finishes each stage immediately (the classic serial order).
+        Both are the SAME per-stage ops, so results are bitwise
+        identical for linear codecs.
 
         Must be called under ``shard_map``/``pjit`` with the mesh axes
         bound (or with ``axis_name=None`` for the local path — the codec
         round-trip still runs so single-device tests see the same wire
         precision, but every collective degrades to a no-op).
         """
-        leaves = self.accumulate(grads)
-        axes = self._check_axes(axis_name)
-        p = comm.axis_size(axes) if axes else 1
-        inv_scale = (1.0 / p) if average and axes else None
-        out: List[Any] = list(leaves)
+        if self.config.overlap:
+            return self.execute_scheduled(grads, axis_name,
+                                          average=average)
+        return self.execute_fused(grads, axis_name, average=average)
 
-        # gather buckets: allgather the slices, densify, average
-        for i in self.gather_leaf_ids:
-            g = self._exchange_gather_leaf(leaves[i], self.leaf_specs[i],
-                                           axes, p)
-            x = accumulation.densify(g, use_kernel=self.config.use_kernel)
-            x = x.astype(self.leaf_specs[i].dtype)
-            if inv_scale is not None:
-                x = x * inv_scale
-            out[i] = x
+    def execute_fused(self, grads, axis_name: comm.AxisNames,
+                      average: bool = True):
+        """Serial reference path: each stage is accumulated, launched,
+        and finished before the next stage starts."""
+        raw, axes, p, inv_scale = self._exchange_setup(grads, axis_name,
+                                                       average)
+        acc: List[Any] = [None] * self.n_leaves
+        out: List[Any] = [None] * self.n_leaves
+        for stage in self.schedule.stages:
+            self._accumulate_stage(stage, raw, acc)
+            inflight = self.launch_stage(stage, acc, axes, p)
+            self.finish_stage(stage, inflight, out, inv_scale, axes, p)
+        # every leaf is exactly one stage's output: nothing pending here
+        return jax.tree_util.tree_unflatten(self.treedef, out)
 
-        # dense buckets: pack (densify fused), collective, unpack
-        for bucket in self.dense_buckets:
-            buf = self.pack_bucket(bucket, leaves)
-            buf = self._exchange_dense_bucket(bucket, buf, axes, p)
-            self.unpack_bucket(bucket, buf, out, inv_scale)
-        # every leaf is either bucketed or gathered: nothing pending here
+    def execute_scheduled(self, grads, axis_name: comm.AxisNames,
+                          average: bool = True):
+        """Overlap path: stages launch in reverse-layer readiness order,
+        each stage's accumulate+pack interleaved AFTER the previous
+        stage's collective is already in flight; unpacks run once every
+        collective has been issued.  XLA's latency-hiding scheduler can
+        then hide stage k's collective behind stage k+1's
+        densify/pack compute."""
+        raw, axes, p, inv_scale = self._exchange_setup(grads, axis_name,
+                                                       average)
+        acc: List[Any] = [None] * self.n_leaves
+        inflight: List[Tuple] = []
+        for stage in self.schedule.stages:
+            self._accumulate_stage(stage, raw, acc)
+            inflight.append(self.launch_stage(stage, acc, axes, p))
+        out: List[Any] = [None] * self.n_leaves
+        for stage, fl in zip(self.schedule.stages, inflight):
+            self.finish_stage(stage, fl, out, inv_scale, axes, p)
         return jax.tree_util.tree_unflatten(self.treedef, out)
 
     def broadcast(self, tree, axis_name: comm.AxisNames, root: int = 0):
@@ -675,10 +853,28 @@ def _build_plan(treedef, contrib_specs: Tuple[Tuple[LeafSpec, ...], ...],
                 n_elems=sum(s.size for s in slots), wire_dtype=dt))
         base += len(ids)
     buckets = tuple(buckets)
+
+    # compile the BucketSchedule: one stage per bucket, each carrying
+    # its readiness key (the leaf set it consumes).  Launch order is
+    # reverse-layer — backward emits leaves in reverse flatten order, so
+    # the stage with the LARGEST minimum leaf id is ready first and its
+    # collective can be in flight while earlier-layer stages are still
+    # accumulating.
+    stages = []
+    for bi, b in enumerate(buckets):
+        stages.append(BucketStage(
+            kind="dense", bucket_id=bi,
+            leaf_ids=tuple(dense_ids[s.leaf_idx] for s in b.slots)))
+    for gi in gather_ids:
+        stages.append(BucketStage(kind="gather", bucket_id=gi,
+                                  leaf_ids=(gi,)))
+    stages.sort(key=lambda s: -s.ready_key)
+    schedule = BucketSchedule(stages=tuple(stages))
+
     return ExchangePlan(treedef=treedef, contrib_specs=contrib_specs,
                         leaf_specs=leaf_specs, dense_leaf_ids=dense_ids,
                         dense_buckets=buckets, gather_leaf_ids=gather_ids,
-                        config=config)
+                        config=config, schedule=schedule)
 
 
 def compile_plan(grads, config: ExchangeConfig) -> ExchangePlan:

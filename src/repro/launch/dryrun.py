@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import INPUT_SHAPES, get_config
-from repro.core import DistributedOptimizer, ExchangeConfig, comm
+from repro.core import DistributedOptimizer, ExchangeConfig, comm, exchange
 from repro.launch import flops as flops_lib
 from repro.launch import hlo as hlo_lib
 from repro.launch import mesh as mesh_lib
@@ -252,6 +252,7 @@ def audit_exchange_plan(arch: str = "transformer-big", n_workers: int = 8,
                         wire_dtype: Optional[str] = None,
                         codec: str = "identity",
                         backend: str = "jax",
+                        overlap: bool = False,
                         batch_per_worker: int = 2,
                         seq_len: int = 32) -> Dict[str, Any]:
     """Check the static ExchangePlan against lowered HLO.
@@ -267,6 +268,12 @@ def audit_exchange_plan(arch: str = "transformer-big", n_workers: int = 8,
     backend lowers to its 2(P-1) collective-permute hops.  With
     ``backend="hierarchical"`` the mesh is folded to
     ``("pod", "data") = (2, n_workers//2)``.
+
+    With ``overlap=True`` the STAGED path is lowered instead (every
+    stage's collective launched before any unpack); the audit
+    additionally checks that the schedule's per-stage collective counts
+    sum to the fused plan's ``n_collectives`` — overlap must reorder,
+    never add or drop, collectives.
     """
     import numpy as np
     from jax.sharding import Mesh, PartitionSpec as P
@@ -294,10 +301,12 @@ def audit_exchange_plan(arch: str = "transformer-big", n_workers: int = 8,
             sparse_as_dense=sparse_as_dense, algorithm=algorithm,
             fusion_threshold=fusion_threshold,
             reduce_scatter=reduce_scatter, wire_dtype=wire_dtype,
-            codec=codec, backend=backend),
+            codec=codec, backend=backend, overlap=overlap),
         axis_name=axis_name)
     plan = opt.plan(grads)
 
+    # opt.exchange honours overlap: fused serial order, or the staged
+    # launch-all-then-unpack schedule
     ex = shard_map(opt.exchange, mesh=mesh, in_specs=(P(),),
                    out_specs=P(), check_rep=False)
     hlo = jax.jit(ex).lower(grads).compile().as_text()
@@ -324,19 +333,42 @@ def audit_exchange_plan(arch: str = "transformer-big", n_workers: int = 8,
         note = ("cpu backend computes %s collectives in f32; expect "
                 "wire_ratio %.2f" % (wire_dt,
                                      comm.dtype_bytes(wire_dt) / 4))
+    # the staged schedule must be a pure reordering of the fused plan:
+    # per-stage collective counts sum to the fused config's
+    # n_collectives (the ISSUE acceptance contract)
+    import dataclasses as _dc
+    fused_plan = exchange.compile_plan(
+        grads, _dc.replace(plan.config, overlap=False))
+    stage_coll = [plan.stage_collectives(s) for s in plan.schedule.stages]
+    stage_hlo = [plan.stage_hlo_collectives(s, workers)
+                 for s in plan.schedule.stages]
+    schedule_info = dict(
+        n_stages=plan.schedule.n_stages,
+        overlap=plan.config.overlap,
+        stage_collectives=stage_coll,
+        stage_hlo_ops=stage_hlo,
+        stage_collectives_sum=sum(stage_coll),
+        fused_n_collectives=fused_plan.n_collectives,
+        stage_sum_matches_fused=(sum(stage_coll)
+                                 == fused_plan.n_collectives),
+    )
     return dict(
         note=note,
         arch=arch, reduced=reduced, n_workers=p, audit_mode="shard_map",
         codec=plan.config.codec, backend=plan.config.backend,
+        overlap=plan.config.overlap,
         strategy=opt.exchange_stats(grads, workers).strategy,
         planned_n_collectives=plan.n_collectives,
         planned_hlo_ops=expected_hlo_ops,
         hlo_ops=hlo_ops,
         hlo_counts=counts,
-        counts_match=hlo_ops == expected_hlo_ops,
+        counts_match=(hlo_ops == expected_hlo_ops
+                      and schedule_info["stage_sum_matches_fused"]),
         planned_wire_bytes=planned_wire,
         hlo_wire_bytes=hlo_wire,
         wire_ratio=(planned_wire / hlo_wire if hlo_wire else None),
+        schedule=schedule_info,
+        schedule_table=plan.describe_schedule(workers),
         plan_table=plan.describe(),
     )
 
@@ -510,6 +542,11 @@ def main(argv=None) -> int:
     ap.add_argument("--backend", default="jax",
                     help="CollectiveBackend registry name (jax, "
                          "hierarchical, ringsim, ...)")
+    ap.add_argument("--overlap", action="store_true",
+                    help="with --audit-exchange (shard_map mode): lower "
+                         "the staged BucketSchedule path and verify its "
+                         "per-stage collective counts sum to the fused "
+                         "plan's n_collectives")
     ap.add_argument("--full-size", action="store_true",
                     help="with --audit-exchange: use the full (not "
                          "reduced) config")
@@ -550,7 +587,8 @@ def main(argv=None) -> int:
                 fusion_threshold=args.fusion_threshold,
                 reduce_scatter=args.reduce_scatter,
                 wire_dtype=args.wire_dtype,
-                codec=args.codec, backend=args.backend)
+                codec=args.codec, backend=args.backend,
+                overlap=args.overlap)
         print(json.dumps(result, indent=2, default=str))
         if args.out:
             with open(args.out, "w") as f:

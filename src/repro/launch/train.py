@@ -60,9 +60,34 @@ def build_optimizer(args, cfg) -> DistributedOptimizer:
             wire_dtype=args.wire_dtype,
             codec=args.codec,
             backend=args.backend,
+            overlap=args.overlap,
         ),
         axis_name=axis,
     )
+
+
+def print_exchange_schedule(args, model, params, opt, pipe,
+                            sparse_embedding: bool, n_dev: int) -> None:
+    """Trace one per-worker gradient tree abstractly (eval_shape, no
+    compute) and print the plan's BucketSchedule — what the step will
+    actually run, stage by stage."""
+    from repro.training.gradients import grad_contributions
+    try:
+        b0 = {k: jnp.asarray(v)[:args.batch_per_worker]
+              for k, v in pipe.batch_at(0).items()}
+        g = jax.eval_shape(
+            lambda p, b: grad_contributions(
+                model, p, b, sparse_embedding=sparse_embedding)[0],
+            params, b0)
+        if args.dist != "horovod":
+            workers = 1
+        elif args.backend == "hierarchical":
+            workers = (2, n_dev // 2)
+        else:
+            workers = n_dev
+        print(opt.exchange_stats(g, n_workers=workers).describe())
+    except Exception as e:                       # informational only
+        print(f"(exchange schedule unavailable: {e})")
 
 
 def main(argv=None) -> int:
@@ -86,10 +111,16 @@ def main(argv=None) -> int:
                          "fusion buffers to this dtype on the wire")
     ap.add_argument("--codec", default="identity",
                     help="WireCodec registry name for the gradient wire "
-                         "(identity, bf16, f16, int8, ...)")
+                         "(identity, bf16, f16, f8e4m3, f8e5m2, int8, "
+                         "...)")
     ap.add_argument("--backend", default="jax",
                     help="CollectiveBackend registry name (jax, "
                          "hierarchical, ringsim, ...)")
+    ap.add_argument("--overlap", action="store_true",
+                    help="staged BucketSchedule: launch per-bucket "
+                         "collectives in reverse-layer readiness order, "
+                         "interleaved with the remaining accumulation "
+                         "compute, before any bucket unpacks")
     ap.add_argument("--batch-per-worker", type=int, default=4)
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--steps", type=int, default=50)
@@ -140,6 +171,9 @@ def main(argv=None) -> int:
     pipe = make_pipeline(cfg, batch_per_host=batch_per_host,
                          seq_len=args.seq_len, seed=args.seed,
                          task=args.task)
+    if args.overlap:
+        print_exchange_schedule(args, model, params, opt, pipe,
+                                sparse_embedding, n_dev)
     trainer = Trainer(model, step, pipe, TrainerConfig(
         total_steps=args.steps, log_every=args.log_every,
         checkpoint_every=args.checkpoint_every,

@@ -35,14 +35,64 @@ def split_microbatches(batch: Dict[str, jax.Array], n: int
     return jax.tree_util.tree_map(split, batch)
 
 
+def _is_contrib_leaf(x) -> bool:
+    return isinstance(x, (list, IndexedSlices))
+
+
+def _make_combine(denom: int):
+    """Per-leaf combiner: dense leaves summed, IndexedSlices
+    concatenated, everything scaled by ``1/denom``."""
+    def combine(*leaves):
+        if isinstance(leaves[0], list):          # contribution lists
+            out = []
+            for contribs in zip(*leaves):
+                if isinstance(contribs[0], IndexedSlices):
+                    idx = jnp.concatenate([c.indices for c in contribs])
+                    vals = jnp.concatenate([c.values
+                                            for c in contribs]) / denom
+                    out.append(IndexedSlices(idx, vals,
+                                             contribs[0].dense_shape))
+                else:
+                    out.append(sum(contribs) / denom)
+            return out
+        return sum(leaves) / denom
+    return combine
+
+
+def _scale_contribs(grads, denom: int):
+    """Scale every contribution (dense, IndexedSlices, or list) by
+    ``1/denom`` without merging anything."""
+    def scale(leaf):
+        if isinstance(leaf, list):
+            return [scale(c) for c in leaf]
+        if isinstance(leaf, IndexedSlices):
+            return IndexedSlices(leaf.indices, leaf.values / denom,
+                                 leaf.dense_shape)
+        return leaf / denom
+    return jax.tree_util.tree_map(scale, grads, is_leaf=_is_contrib_leaf)
+
+
+def _as_contrib_list(leaf) -> list:
+    return list(leaf) if isinstance(leaf, list) else [leaf]
+
+
 def accumulate_microbatches(model, params, stacked_batch,
                             sparse_embedding: bool = False,
+                            defer_final: bool = False,
                             **loss_kw) -> Tuple[Any, jax.Array, Dict]:
     """Mean of per-microbatch gradients via lax.scan (O(1) live memory
     in the microbatch count).  Sparse embedding contributions are
     accumulated by CONCATENATION (the faithful representation: each
     microbatch contributes its own token rows) — so the paper's
-    gather-vs-reduce choice applies to microbatching too."""
+    gather-vs-reduce choice applies to microbatching too.
+
+    With ``defer_final=True`` (the overlap-scheduling hook) the FINAL
+    microbatch's contribution is NOT folded into the running sum:
+    every leaf comes back as a contribution list
+    ``[partial_over_first_n-1, final]`` so a scheduled exchange
+    (``ExchangeConfig(overlap=True)``) performs the remaining
+    accumulation per stage, interleaved with earlier stages'
+    already-launched collectives."""
     n = jax.tree_util.tree_leaves(stacked_batch)[0].shape[0]
 
     def one(mb):
@@ -59,6 +109,18 @@ def accumulate_microbatches(model, params, stacked_batch,
 
         mb0 = jax.tree_util.tree_map(lambda x: x[0], stacked_batch)
         g0, loss0, metrics0 = one(mb0)
+        if defer_final and n > 1:
+            # scan all but the last microbatch; the final one stays a
+            # separate list entry for the scheduled exchange
+            rest = jax.tree_util.tree_map(lambda x: x[1:-1],
+                                          stacked_batch)
+            (acc, loss_sum), _ = jax.lax.scan(body, (g0, loss0), rest)
+            mb_last = jax.tree_util.tree_map(lambda x: x[-1],
+                                             stacked_batch)
+            g_last, loss_last, _ = one(mb_last)
+            grads = jax.tree_util.tree_map(
+                lambda a, b: [a / n, b / n], acc, g_last)
+            return grads, (loss_sum + loss_last) / n, metrics0
         rest = jax.tree_util.tree_map(lambda x: x[1:], stacked_batch)
         (acc, loss_sum), _ = jax.lax.scan(body, (g0, loss0), rest)
         grads = jax.tree_util.tree_map(lambda g: g / n, acc)
@@ -73,23 +135,19 @@ def accumulate_microbatches(model, params, stacked_batch,
         grads_list.append(g)
         losses.append(loss)
 
-    def combine(*leaves):
-        if isinstance(leaves[0], list):          # contribution lists
-            out = []
-            for contribs in zip(*leaves):
-                if isinstance(contribs[0], IndexedSlices):
-                    idx = jnp.concatenate([c.indices for c in contribs])
-                    vals = jnp.concatenate([c.values for c in contribs]) / n
-                    out.append(IndexedSlices(idx, vals,
-                                             contribs[0].dense_shape))
-                else:
-                    out.append(sum(contribs) / n)
-            return out
-        return sum(leaves) / n
+    if defer_final and n > 1:
+        partial = (grads_list[0] if n == 2 else jax.tree_util.tree_map(
+            _make_combine(1), *grads_list[:-1], is_leaf=_is_contrib_leaf))
+        partial = _scale_contribs(partial, n)
+        final = _scale_contribs(grads_list[-1], n)
+        grads = jax.tree_util.tree_map(
+            lambda a, b: _as_contrib_list(a) + _as_contrib_list(b),
+            partial, final, is_leaf=_is_contrib_leaf)
+        return grads, sum(losses) / n, {}
 
     grads = jax.tree_util.tree_map(
-        combine, *grads_list,
-        is_leaf=lambda x: isinstance(x, (list, IndexedSlices)))
+        _make_combine(n), *grads_list,
+        is_leaf=_is_contrib_leaf)
     return grads, sum(losses) / n, {}
 
 
@@ -138,8 +196,18 @@ def make_scaled_train_step(model, opt, scaler: LossScaler,
                            sparse_embedding: bool = False,
                            **loss_kw) -> Callable:
     """Train step with loss scaling + optional microbatch accumulation.
-    Overflow steps leave params/opt_state untouched (scale backs off)."""
+    Overflow steps leave params/opt_state untouched (scale backs off).
+
+    When the optimizer's ``ExchangeConfig`` has ``overlap=True`` the
+    final microbatch's gradient is handed to the exchange UNSUMMED
+    (``defer_final``): the staged BucketSchedule folds it in per
+    bucket, so each stage's remaining accumulation compute runs after
+    the previous stage's collective has already launched."""
     from repro.optim.base import apply_updates
+
+    cfg = getattr(opt, "exchange_config", None)
+    defer_final = (cfg is not None and cfg.overlap
+                   and n_microbatches > 1)
 
     def step(params, opt_state, scaler_state, batch):
         def loss_fn(p, b):
@@ -147,7 +215,7 @@ def make_scaled_train_step(model, opt, scaler: LossScaler,
                 stacked = split_microbatches(b, n_microbatches)
                 g, loss, metrics = accumulate_microbatches(
                     model, p, stacked, sparse_embedding=sparse_embedding,
-                    **loss_kw)
+                    defer_final=defer_final, **loss_kw)
             else:
                 g, loss, metrics = grad_contributions(
                     model, p, b, sparse_embedding=sparse_embedding,

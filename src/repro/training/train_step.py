@@ -4,12 +4,20 @@ The returned step works both single-device (axis_name=None on the
 DistributedOptimizer) and inside ``shard_map`` over the data-parallel
 mesh axes (the Horovod-faithful mode used by the launcher and the
 multi-worker tests).
+
+The step is a BucketSchedule consumer: the exchange is split out of the
+optimizer update so the scheduled path (``ExchangeConfig(overlap=True)``)
+can launch per-bucket collectives in reverse-layer readiness order,
+interleaved with the remaining accumulation/pack compute, before any
+bucket unpacks.  ``metrics["exchange_stages"]`` reports how many stages
+the active schedule ran.
 """
 from __future__ import annotations
 
 from typing import Any, Callable, Dict, Tuple
 
 import jax
+import jax.numpy as jnp
 
 from repro.core.dist_opt import DistributedOptimizer
 from repro.optim.base import apply_updates
@@ -21,14 +29,24 @@ def make_train_step(model, opt: DistributedOptimizer,
                     **loss_kw) -> Callable:
     """Returns step(params, opt_state, batch) -> (params, opt_state,
     metrics)."""
+    cfg = getattr(opt, "exchange_config", None)
+    overlap = cfg is not None and cfg.overlap
 
     def step(params, opt_state, batch):
         grads, loss, metrics = grad_contributions(
             model, params, batch, sparse_embedding=sparse_embedding,
             **loss_kw)
-        updates, opt_state = opt.update(grads, opt_state, params)
+        if cfg is None:                      # plain Optimizer fallback
+            updates, opt_state = opt.update(grads, opt_state, params)
+            params = apply_updates(params, updates)
+            return params, opt_state, dict(metrics, loss=loss)
+        dense = (opt.exchange_scheduled(grads) if overlap
+                 else opt.exchange(grads))
+        updates, opt_state = opt.base.update(dense, opt_state, params)
         params = apply_updates(params, updates)
-        metrics = dict(metrics, loss=loss)
+        n_stages = opt.plan(grads).schedule.n_stages
+        metrics = dict(metrics, loss=loss,
+                       exchange_stages=jnp.int32(n_stages))
         return params, opt_state, metrics
 
     return step

@@ -42,21 +42,30 @@ class Trainer:
         history: List[Dict[str, float]] = []
         tokens_seen = 0
         t0 = time.perf_counter()
+        window_t0, window_steps = t0, 0
         for step in range(start_step, cfg.total_steps):
             batch = {k: jax.numpy.asarray(v)
                      for k, v in self.pipeline.batch_at(step).items()}
             params, opt_state, metrics = jit_step(params, opt_state, batch)
             tokens_seen += int(np.prod(batch["tokens"].shape))
+            window_steps += 1
             if (step + 1) % cfg.log_every == 0 or step == cfg.total_steps - 1:
                 m = {k: float(v) for k, v in metrics.items()
                      if np.ndim(v) == 0}
-                dt = time.perf_counter() - t0
+                now = time.perf_counter()
+                dt = now - t0
+                # mean wall-time per step since the last log line (the
+                # number the overlap benchmark compares on/off)
                 m.update(step=step + 1, tokens=tokens_seen,
-                         tok_per_s=tokens_seen / max(dt, 1e-9))
+                         tok_per_s=tokens_seen / max(dt, 1e-9),
+                         step_ms=(now - window_t0) * 1e3
+                         / max(window_steps, 1))
+                window_t0, window_steps = now, 0
                 history.append(m)
                 log(f"step {step+1}: loss={m.get('loss', float('nan')):.4f} "
                     f"ce={m.get('ce', float('nan')):.4f} "
-                    f"tok/s={m['tok_per_s']:.0f}")
+                    f"tok/s={m['tok_per_s']:.0f} "
+                    f"step_ms={m['step_ms']:.1f}")
             if (cfg.checkpoint_every and cfg.checkpoint_dir
                     and (step + 1) % cfg.checkpoint_every == 0):
                 save_checkpoint(cfg.checkpoint_dir, step + 1,

@@ -723,7 +723,10 @@ def test_plan_equals_eager_for_every_codec_backend_pair():
             axis_name=('data',))
         e_ref, w_ref, _ = run(ref, flat, P('data'))
         tols = {'identity': 1e-5, 'bf16': 2e-2, 'f16': 2e-2,
-                'int8': 2e-2}
+                'int8': 2e-2,
+                # fp8 casts: 3 / 2 mantissa bits -> rel eps 2^-4 / 2^-3
+                # of the O(1) test values, absolute bound with margin
+                'f8e4m3': 0.5, 'f8e5m2': 1.0}
 
         n_pairs = 0
         for codec in available_codecs():
@@ -845,6 +848,247 @@ def test_gspmd_audit_backend_reports_compiler_collectives():
     assert "OK" in out
 
 
+# ---------------------------------------------------------------------------
+# BucketSchedule: staged execution, readiness/ordering, overlap
+# ---------------------------------------------------------------------------
+
+def _multi_bucket_tree(seed=0, n_dense=6):
+    """A tree the fusion planner splits into several buckets (per-leaf
+    bucketing) plus one sparse gather leaf."""
+    rng = np.random.default_rng(seed)
+    tree = {f"w{i}": jnp.asarray(rng.standard_normal((16 + i, 8)),
+                                 jnp.float32)
+            for i in range(n_dense)}
+    tree["emb"] = [IndexedSlices(
+        jnp.asarray(rng.integers(0, 24, 6, dtype=np.int32)),
+        jnp.asarray(rng.standard_normal((6, 8)), jnp.float32), (24, 8)),
+        jnp.asarray(rng.standard_normal((24, 8)), jnp.float32)]
+    return tree
+
+
+def test_schedule_stages_partition_leaves_in_reverse_layer_order():
+    """Every bucket is exactly one stage; stage leaf sets partition the
+    grad tree; launch order is descending readiness key; per-stage
+    accounting sums to the fused plan totals."""
+    tree = _multi_bucket_tree()
+    for cfg in (ExchangeConfig(sparse_as_dense=True),
+                ExchangeConfig(),                       # gather leaf
+                ExchangeConfig(sparse_as_dense=True, codec="int8"),
+                ExchangeConfig(sparse_as_dense=True,
+                               fusion_threshold=1 << 20)):
+        plan = compile_plan(tree, cfg)
+        sch = plan.schedule
+        assert sch.n_stages == plan.n_buckets
+        covered = sorted(i for st in sch.stages for i in st.leaf_ids)
+        assert covered == list(range(plan.n_leaves))
+        keys = [st.ready_key for st in sch.stages]
+        assert keys == sorted(keys, reverse=True)       # reverse-layer
+        assert sum(plan.stage_collectives(st) for st in sch.stages) \
+            == plan.n_collectives
+        assert sum(plan.stage_wire_bytes(st, 8) for st in sch.stages) \
+            == plan.wire_bytes(8)
+        assert sum(plan.stage_hlo_collectives(st, 8)
+                   for st in sch.stages) == plan.hlo_collectives(8)
+
+
+@given(shape_mixes())
+@settings(max_examples=30, deadline=None)
+def test_schedule_properties_hold_for_random_trees(tree):
+    plan = compile_plan(tree, ExchangeConfig(algorithm="tf_algorithm1"))
+    sch = plan.schedule
+    covered = sorted(i for st in sch.stages for i in st.leaf_ids)
+    assert covered == list(range(plan.n_leaves))
+    keys = [st.ready_key for st in sch.stages]
+    assert keys == sorted(keys, reverse=True)
+    assert sum(plan.stage_collectives(st) for st in sch.stages) \
+        == plan.n_collectives
+    assert sum(plan.stage_wire_bytes(st, 8) for st in sch.stages) \
+        == plan.wire_bytes(8)
+
+
+def test_staged_execute_is_bitwise_identical_locally():
+    """Acceptance: overlap=True must produce numerically IDENTICAL
+    updates — bitwise for linear codecs (identity / bf16 / fp8), within
+    the quantisation bound for int8."""
+    tree = _multi_bucket_tree()
+    cast_codecs = ["identity", "bf16"]
+    if "f8e4m3" in available_codecs():       # fp8 needs native jax float8
+        cast_codecs.append("f8e4m3")
+    for codec in cast_codecs:
+        fused = DistributedOptimizer(adamw(1e-3), exchange=ExchangeConfig(
+            sparse_as_dense=True, codec=codec)).exchange(tree)
+        staged = DistributedOptimizer(adamw(1e-3), exchange=ExchangeConfig(
+            sparse_as_dense=True, codec=codec, overlap=True)
+        ).exchange(tree)
+        for a, b in zip(jax.tree_util.tree_leaves(fused),
+                        jax.tree_util.tree_leaves(staged)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    q_f = DistributedOptimizer(adamw(1e-3), exchange=ExchangeConfig(
+        sparse_as_dense=True, codec="int8")).exchange(tree)
+    q_s = DistributedOptimizer(adamw(1e-3), exchange=ExchangeConfig(
+        sparse_as_dense=True, codec="int8", overlap=True)).exchange(tree)
+    for a, b in zip(jax.tree_util.tree_leaves(q_f),
+                    jax.tree_util.tree_leaves(q_s)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_execute_scheduled_and_fused_methods_share_one_schedule():
+    """execute()/execute_fused()/execute_scheduled() are all the same
+    per-stage ops; overlap only changes the launch/finish interleaving,
+    so all three agree bitwise on the local path."""
+    tree = _multi_bucket_tree()
+    opt = DistributedOptimizer(adamw(1e-3),
+                               exchange=ExchangeConfig(sparse_as_dense=True))
+    a = opt.exchange(tree)
+    b = opt.exchange_scheduled(tree)
+    c = opt.exchange_fused(tree)
+    for x, y, z in zip(*(jax.tree_util.tree_leaves(t) for t in (a, b, c))):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(z))
+
+
+def test_exchange_stats_describe_reports_schedule():
+    tree = _multi_bucket_tree()
+    opt = DistributedOptimizer(adamw(1e-3), exchange=ExchangeConfig(
+        sparse_as_dense=True, overlap=True))
+    stats = opt.exchange_stats(tree, n_workers=8)
+    assert stats.n_stages == opt.plan(tree).n_buckets
+    assert stats.overlap
+    assert "+overlap" in stats.strategy
+    text = stats.describe()
+    assert "overlap=on" in text
+    assert f"{stats.n_stages} stages" in text
+    assert "ready@" in text and "wire B" in text
+    fused = DistributedOptimizer(adamw(1e-3), exchange=ExchangeConfig(
+        sparse_as_dense=True))
+    assert "overlap=off" in fused.exchange_stats(tree, 8).describe()
+
+
+def test_overlap_equals_fused_across_workers_bitwise():
+    """Acceptance: under shard_map on 8 workers the staged schedule
+    produces BITWISE the fused result for linear codecs, lowers to
+    exactly plan.hlo_collectives(P) collective ops, and its per-stage
+    collective counts sum to the fused plan's n_collectives."""
+    out = run_with_devices(textwrap.dedent("""
+        import functools
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh, PartitionSpec as P
+        from jax.experimental.shard_map import shard_map
+        from repro.core import (DistributedOptimizer, ExchangeConfig,
+                                IndexedSlices)
+        from repro.launch import hlo as hlo_lib
+        from repro.optim import adamw
+
+        V, D, N = 32, 16, 10
+        P_ = len(jax.devices())
+        mesh = Mesh(np.array(jax.devices()), ('data',))
+        rng = np.random.default_rng(0)
+        idx = jnp.asarray(rng.integers(0, V, (P_, N), dtype=np.int32))
+        vals = jnp.asarray(rng.standard_normal((P_, N, D)), jnp.float32)
+        dense = jnp.asarray(rng.standard_normal((P_, V, D)), jnp.float32)
+        ws = jnp.asarray(rng.standard_normal((P_, 6, 40, 8)), jnp.float32)
+
+        def f(i, v, d, w, opt):
+            g = {'e': [IndexedSlices(i[0], v[0], (V, D)), d[0]]}
+            for k in range(6):
+                g['w%d' % k] = w[0, k]
+            out = opt.exchange(g)
+            return out['e'][None], jnp.stack(
+                [out['w%d' % k] for k in range(6)])[None]
+
+        def run(opt):
+            sm = jax.jit(shard_map(functools.partial(f, opt=opt),
+                                   mesh=mesh, in_specs=(P('data'),) * 4,
+                                   out_specs=P('data'), check_rep=False))
+            hlo = sm.lower(idx, vals, dense, ws).compile().as_text()
+            e, w = sm(idx, vals, dense, ws)
+            return np.asarray(e)[0], np.asarray(w)[0], hlo
+
+        tree = {'e': [IndexedSlices(idx[0], vals[0], (V, D)), dense[0]]}
+        for k in range(6):
+            tree['w%d' % k] = ws[0, k]
+
+        for codec in ('identity', 'bf16'):
+            for sad in (True, False):
+                base = ExchangeConfig(sparse_as_dense=sad, codec=codec)
+                ov = ExchangeConfig(sparse_as_dense=sad, codec=codec,
+                                    overlap=True)
+                o_f = DistributedOptimizer(adamw(1e-3), exchange=base,
+                                           axis_name=('data',))
+                o_s = DistributedOptimizer(adamw(1e-3), exchange=ov,
+                                           axis_name=('data',))
+                e0, w0, _ = run(o_f)
+                e1, w1, hlo = run(o_s)
+                assert np.array_equal(e0, e1), (codec, sad)
+                assert np.array_equal(w0, w1), (codec, sad)
+                plan = o_s.plan(tree)
+                counts = hlo_lib.count_collectives(hlo)
+                assert sum(counts.values()) == plan.hlo_collectives(P_), \
+                    (codec, sad, counts)
+                fused_plan = o_f.plan(tree)
+                stage_sum = sum(plan.stage_collectives(s)
+                                for s in plan.schedule.stages)
+                assert stage_sum == fused_plan.n_collectives, (codec, sad)
+        print('OK')
+    """))
+    assert "OK" in out
+
+
+# ---------------------------------------------------------------------------
+# fp8 codecs (f8e4m3 / f8e5m2 on the cast-codec path)
+# ---------------------------------------------------------------------------
+
+def _require_fp8():
+    """fp8 codecs register only when the installed jax exposes native
+    float8 dtypes (the codecs.py graceful-degradation contract)."""
+    if "f8e4m3" not in available_codecs():
+        pytest.skip("installed jax has no native float8 dtypes")
+
+
+def test_fp8_codec_roundtrip_error_bounds():
+    """e4m3 (3 mantissa bits) and e5m2 (2 bits) round-trip within their
+    per-element relative eps; both are linear (no side scales) and bill
+    1 byte/element on the wire."""
+    _require_fp8()
+    assert {"f8e4m3", "f8e5m2"} <= set(available_codecs())
+    rng = np.random.default_rng(0)
+    buf = np.asarray(rng.standard_normal(4000) * 3.0, np.float32)
+    for name, rel, floor in (("f8e4m3", 2.0 ** -4, 2.0 ** -9),
+                             ("f8e5m2", 2.0 ** -3, 2.0 ** -16)):
+        codec = get_codec(name)
+        assert codec.linear and codec.scale_bytes == 0
+        assert codec.wire_bytes(1000, "float32") == 1000
+        wire, side = codec.encode(jnp.asarray(buf))
+        assert side is None
+        assert jnp.dtype(wire.dtype).itemsize == 1
+        out = np.asarray(codec.decode(wire, None, jnp.float32))
+        err = np.abs(out - buf)
+        assert (err <= rel * np.abs(buf) + floor).all(), \
+            (name, float(err.max()))
+    # dtype-ish spellings resolve to the same registered codec
+    assert get_codec("float8_e4m3fn") is get_codec("f8e4m3")
+    assert get_codec("f8e5m2") is get_codec("fp8e5m2")
+
+
+def test_fp8_codec_quarters_dense_wire_and_executes():
+    _require_fp8()
+    tree = {"w": jnp.ones((64, 64), jnp.float32)}
+    f32 = compile_plan(tree, ExchangeConfig(sparse_as_dense=True))
+    f8 = compile_plan(tree, ExchangeConfig(sparse_as_dense=True,
+                                           codec="f8e4m3"))
+    assert f8.wire_bytes(8) == f32.wire_bytes(8) // 4
+    # the accumulated representation stays f32 (upcast on unpack)
+    assert f8.buffer_bytes(8) == f32.buffer_bytes(8)
+    tree = _demo_tree()
+    opt = DistributedOptimizer(adamw(1e-3), exchange=ExchangeConfig(
+        sparse_as_dense=True, codec="f8e4m3"))
+    out = opt.exchange(tree)
+    ref = densify(accumulate_gradients(tree["emb"], sparse_as_dense=True))
+    assert out["emb"].dtype == jnp.float32
+    bound = float(jnp.abs(ref).max()) * 2.0 ** -3 + 2.0 ** -8
+    assert float(jnp.abs(out["emb"] - ref).max()) <= bound
+
+
 @pytest.mark.slow
 def test_dryrun_exchange_audit_reduced_transformer_big():
     """Acceptance: the full audit on the reduced transformer-big config
@@ -865,6 +1109,16 @@ def test_dryrun_exchange_audit_reduced_transformer_big():
                                  codec='int8', backend='hierarchical')
         assert r3['counts_match'], r3
         assert abs(r3['wire_ratio'] - 1.0) < 1e-6, r3
+        # acceptance: the staged overlap path lowers to the SAME HLO
+        # collective count and its per-stage counts sum to the fused
+        # plan's n_collectives
+        r4 = audit_exchange_plan(arch='transformer-big', n_workers=8,
+                                 overlap=True)
+        assert r4['overlap'] and r4['counts_match'], r4
+        assert r4['schedule']['stage_sum_matches_fused'], r4
+        assert r4['schedule']['n_stages'] > 1, r4
+        assert r4['hlo_ops'] == r['hlo_ops'], (r4['hlo_ops'], r['hlo_ops'])
+        assert abs(r4['wire_ratio'] - 1.0) < 1e-6, r4
         print('OK')
     """), n=8)
     assert "OK" in out

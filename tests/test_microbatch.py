@@ -98,6 +98,66 @@ def test_scaled_step_skips_on_overflow(setup):
     assert float(ss3.scale) < float(ss.scale) * 1.01  # backed off (or =)
 
 
+@pytest.mark.parametrize("n", [2, 4])
+def test_deferred_final_microbatch_matches_plain(setup, n):
+    """defer_final=True returns contribution lists [partial, final]
+    whose sum equals the plain microbatch mean — the representation the
+    staged BucketSchedule folds in per stage."""
+    cfg, m, params, batch = setup
+    stacked = split_microbatches(batch, n)
+    g_plain, l_plain, _ = accumulate_microbatches(m, params, stacked)
+    g_def, l_def, _ = accumulate_microbatches(m, params, stacked,
+                                              defer_final=True)
+    is_leaf = lambda x: isinstance(x, list)
+    plain = jax.tree_util.tree_leaves(g_plain)
+    deferred = jax.tree_util.tree_leaves(g_def, is_leaf=is_leaf)
+    assert len(plain) == len(deferred)
+    for a, leaf in zip(plain, deferred):
+        assert isinstance(leaf, list) and len(leaf) == 2
+        np.testing.assert_allclose(np.asarray(leaf[0] + leaf[1]),
+                                   np.asarray(a), rtol=5e-5, atol=5e-6)
+    np.testing.assert_allclose(float(l_plain), float(l_def), rtol=1e-6)
+
+
+def test_deferred_final_sparse_contributions_densify_to_full_grad(setup):
+    cfg, m, params, batch = setup
+    g_full, _, _ = grad_contributions(m, params, batch)
+    stacked = split_microbatches(batch, 4)
+    g_s, _, _ = accumulate_microbatches(m, params, stacked,
+                                        sparse_embedding=True,
+                                        defer_final=True)
+    emb_contribs = g_s["embedding"]
+    assert isinstance(emb_contribs, list) and len(emb_contribs) >= 2
+    emb = sum(densify(c) if hasattr(c, "indices") else c
+              for c in emb_contribs)
+    np.testing.assert_allclose(np.asarray(emb),
+                               np.asarray(g_full["embedding"]),
+                               rtol=5e-5, atol=5e-6)
+
+
+def test_overlap_scaled_step_matches_fused(setup):
+    """Acceptance: the overlap schedule (deferred final microbatch +
+    staged exchange) produces the same parameter update as the fused
+    path."""
+    from repro.core import ExchangeConfig
+    cfg, m, params, batch = setup
+    outs = {}
+    for overlap in (False, True):
+        opt = DistributedOptimizer(adamw(1e-3), exchange=ExchangeConfig(
+            sparse_as_dense=True, overlap=overlap))
+        scaler = LossScaler(init_scale=2.0 ** 10)
+        step = jax.jit(make_scaled_train_step(m, opt, scaler,
+                                              n_microbatches=4))
+        p2, _, _, met = step(params, opt.init(params), scaler.init(),
+                             batch)
+        assert not bool(met["overflow"])
+        outs[overlap] = p2
+    for a, b in zip(jax.tree_util.tree_leaves(outs[False]),
+                    jax.tree_util.tree_leaves(outs[True])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-7)
+
+
 def test_scaled_microbatch_training_learns(setup):
     cfg, m, params, batch = setup
     opt = DistributedOptimizer(adamw(5e-3), sparse_as_dense=True)
