@@ -4,14 +4,19 @@ Public API:
   IndexedSlices           sparse row-slice gradient (tf.IndexedSlices analogue)
   accumulate_gradients    paper Alg. 1 (TF) / Alg. 2 (proposed) accumulation
   ExchangePlan            static collective schedule (bucketing + collectives)
-  WireCodec               wire-format protocol (identity / bf16 / int8+scales)
+  WireCodec               wire-format protocol (identity / bf16 / int8+scales),
+                          stateful via the zero-state adapter defaults
+  ExchangeState           pytree-registered per-bucket codec state (error-
+                          feedback residuals), threaded through the train step
+  ErrorFeedbackCodec      "<codec>+ef": quantisation-residual feedback wrapper
   CollectiveBackend       collective protocol (jax / hierarchical / ringsim)
   DistributedOptimizer    Horovod-style wrapper; exchange=ExchangeConfig(...)
 """
 from repro.core.indexed_slices import IndexedSlices, concat_slices, is_indexed_slices
 from repro.core.accumulation import (accumulate_gradients, densify,
                                      dense_to_slices, accumulated_nbytes)
-from repro.core.codecs import (WireCodec, available_codecs, get_codec,
+from repro.core.codecs import (ErrorFeedbackCodec, ExchangeState, WireCodec,
+                               available_codecs, get_codec,
                                register_codec)
 from repro.core.backend import (CollectiveBackend, available_backends,
                                 get_backend, register_backend)

@@ -105,6 +105,22 @@ class CollectiveBackend:
         other P-1 workers' payloads (backend-invariant total)."""
         return (_prod(levels) - 1) * payload_bytes
 
+    # -- per-mesh-level (hop) accounting ------------------------------------
+    def dense_hop_wire_bytes(self, kind: str, n_elems: int, native_dtype,
+                             codec: WireCodec,
+                             levels: Sequence[int]) -> Tuple[int, ...]:
+        """Per-level wire bytes for one dense bucket, in ``levels``
+        order.  Flat backends move everything in one hop; hierarchical
+        backends bill each mesh axis separately (and requantize
+        non-linear wires between hops)."""
+        return (self.dense_wire_bytes(kind, n_elems, native_dtype, codec,
+                                      levels),)
+
+    def gather_hop_wire_bytes(self, payload_bytes: int,
+                              levels: Sequence[int]) -> Tuple[int, ...]:
+        """Per-level wire bytes for one gather bucket."""
+        return (self.gather_wire_bytes(payload_bytes, levels),)
+
     def allreduce_wire_bytes(self, n_elems: int, wire_dtype,
                              levels: Sequence[int]) -> int:
         raise NotImplementedError
@@ -143,12 +159,21 @@ class CollectiveBackend:
         return (p - 1) / denom if denom else 0.0
 
     def hlo_wire_estimate(self, coll_bytes: Dict[str, float],
-                          levels: Sequence[int]) -> float:
+                          levels: Sequence[int],
+                          codec: Optional[WireCodec] = None,
+                          ag_factor: Optional[float] = None) -> float:
         """Ring-model wire bytes implied by HLO collective RESULT bytes
-        (what ``analyze_collectives`` reports) under this backend."""
+        (what ``analyze_collectives`` reports) under this backend.
+        ``codec`` lets hop-aware backends pick the right all-gather
+        factor for requantized (non-linear) wires; ``ag_factor``
+        (``plan.hlo_allgather_factor``) overrides it with the plan's
+        wire-weighted mix when one plan carries gathers of more than
+        one kind."""
         p = _prod(levels)
         ar = 2 * (p - 1) / p * coll_bytes.get("all-reduce", 0.0)
-        ag = self._gather_factor(levels) * coll_bytes.get("all-gather", 0.0)
+        factor = (ag_factor if ag_factor is not None
+                  else self._gather_factor(levels))
+        ag = factor * coll_bytes.get("all-gather", 0.0)
         rs = (p - 1) * coll_bytes.get("reduce-scatter", 0.0)
         cp = coll_bytes.get("collective-permute", 0.0)
         return ar + ag + rs + cp
@@ -216,9 +241,42 @@ class HierarchicalBackend(JaxCollectives):
     def rs_ag_wire_bytes(self, n_elems, wire_dtype, levels):
         raise ValueError("hierarchical backend has no RS+AG path")
 
+    def dense_wire_bytes(self, kind, n_elems, native_dtype, codec, levels):
+        # exactly the sum of the per-hop bill, so the two accountings
+        # can never diverge
+        return sum(self.dense_hop_wire_bytes(kind, n_elems, native_dtype,
+                                             codec, levels))
+
+    def dense_hop_wire_bytes(self, kind, n_elems, native_dtype, codec,
+                             levels):
+        if _prod(levels) <= 1:
+            return tuple(0 for _ in levels)
+        if not codec.linear:
+            # per-hop requantizing reduction: at every mesh level each
+            # worker gathers its group's (values, scales), decode-sums,
+            # and RE-ENCODES the partial sum for the next level — so
+            # each hop moves (p_k - 1) payloads instead of the
+            # full-mesh gather's (P - 1)
+            payload = codec.wire_bytes(n_elems, native_dtype)
+            return tuple((pk - 1) * payload for pk in levels)
+        if kind != ALLREDUCE:
+            raise ValueError("hierarchical backend has no RS+AG path")
+        dt = codec.wire_dtype(native_dtype)
+        return tuple(comm.allreduce_wire_bytes((n_elems,), dt, pk)
+                     for pk in levels)
+
+    def gather_hop_wire_bytes(self, payload_bytes, levels):
+        # per-axis tiled allgathers, innermost first: results telescope
+        # (rows concatenate — nothing to requantize between levels)
+        out, inner = [], 1
+        for pk in reversed(tuple(levels)):
+            out.append((pk - 1) * inner * payload_bytes)
+            inner *= pk
+        return tuple(reversed(out))
+
     def hlo_ops_dense(self, kind, codec, levels):
         if not codec.linear:
-            return 2 * len(levels)
+            return 2 * len(levels)         # (values, scales) per hop
         if kind == ALLREDUCE:
             return len(levels)             # one psum per axis
         raise ValueError("hierarchical backend has no RS+AG path")
@@ -228,7 +286,8 @@ class HierarchicalBackend(JaxCollectives):
             return n_levels
         return super().logical_collectives(kind, n_levels)
 
-    def hlo_wire_estimate(self, coll_bytes, levels):
+    def hlo_wire_estimate(self, coll_bytes, levels, codec=None,
+                          ag_factor=None):
         # L equal-sized psums per buffer: split the aggregate all-reduce
         # result bytes evenly across levels, each billed at its own ring
         out = 0.0
@@ -236,8 +295,22 @@ class HierarchicalBackend(JaxCollectives):
         for p in levels:
             if p > 1:
                 out += 2 * (p - 1) / p * ar_total
-        out += self._gather_factor(levels) * coll_bytes.get("all-gather",
-                                                            0.0)
+        if ag_factor is not None:
+            # the plan's wire-weighted mix: exact even when per-hop
+            # requantize gathers and telescoping sparse gathers (whose
+            # per-hop payloads scale differently) share one plan
+            factor = ag_factor
+        elif codec is not None and not codec.linear:
+            # per-hop requantize gathers: every hop's all-gather result
+            # is p_k payloads for (p_k - 1) payloads on the wire, so the
+            # aggregate factor is Σ(p_k - 1) / Σ p_k (uniform across the
+            # values and scales tensors — both are gathered every hop)
+            num = sum(p - 1 for p in levels)
+            den = sum(levels)
+            factor = num / den if den else 0.0
+        else:
+            factor = self._gather_factor(levels)
+        out += factor * coll_bytes.get("all-gather", 0.0)
         out += coll_bytes.get("collective-permute", 0.0)
         return out
 

@@ -1,4 +1,4 @@
-"""WireCodec — pluggable gradient wire formats.
+"""WireCodec — pluggable gradient wire formats, with explicit state.
 
 The paper's result is that the *representation* of the accumulated
 gradient decides scale-out behaviour; Ott et al. (Scaling NMT) showed
@@ -7,9 +7,14 @@ the next win is narrowing the wire itself (fp16), and quantised wires
 ``wire_dtype`` flag threaded through ``ExchangeConfig`` and hand-rolled
 casts inside ``ExchangePlan``; this module makes it a protocol:
 
-    encode(buf)            -> (wire values, optional side scales)
-    decode(wire, scale, …) -> buf in the native dtype
-    wire_bytes(n_elems)    -> exact encoded payload size
+    init_state(plan)          -> ExchangeState (pytree, one entry/stage)
+    encode(buf)               -> (wire values, optional side scales)
+    encode_stateful(buf, st)  -> (wire, scales, new bucket state)
+    encode_hop(buf, st, k)    -> hop-k encode (k=0 consumes the state)
+    requantize(buf)           -> stateless re-encode between mesh levels
+    reduce_hop(gathered, …)   -> decode + sum one hop's gathered payloads
+    decode(wire, scale, …)    -> buf in the native dtype
+    wire_bytes(n_elems)       -> exact encoded payload size
 
 with a registry so new codecs (fp8, blockwise int4, …) slot in by name.
 
@@ -22,7 +27,25 @@ Codecs come in two families the scheduler must distinguish:
     quantise against *their own* scale, so the wire cannot be reduced
     in-flight.  The plan exchanges these via allgather of (values,
     scales) and performs the reduction after decode — exactly how
-    compressed-gradient allreduce is implemented in practice.
+    compressed-gradient allreduce is implemented in practice.  On the
+    hierarchical backend the plan runs one (encode -> gather ->
+    reduce_hop) round PER MESH AXIS, re-encoding the partial sums with
+    ``requantize`` between levels, instead of one full-mesh gather.
+
+And in two statefulness families:
+
+  * **stateless** codecs carry no step-to-step memory.  The base-class
+    defaults ARE the zero-state adapter: ``init_bucket_state`` returns
+    the empty pytree ``()`` and ``encode_stateful`` passes the state
+    through, so every stateless codec rides the stateful protocol
+    unchanged (bitwise — no extra op is inserted);
+  * **stateful** codecs (``stateful = True``) accumulate per-bucket
+    memory across steps.  ``ErrorFeedbackCodec`` wraps any stateless
+    codec and keeps one f32 residual per dense fusion buffer: each step
+    encodes ``grad + residual`` and banks the new quantisation error,
+    so compression error compensates instead of compounding (the
+    EF-SGD / 1-bit-Adam construction).  Registry names take an ``+ef``
+    suffix: ``get_codec("int8+ef")``.
 
 ``Int8Codec`` stores one f32 absmax scale per bucket (the "tiny
 side-tensor"); quantisation runs through the fused Pallas kernel
@@ -31,10 +54,49 @@ pure-jax path.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+#: suffix marking an ErrorFeedback-wrapped codec in the registry
+EF_SUFFIX = "+ef"
+
+
+@jax.tree_util.register_pytree_with_keys_class
+class ExchangeState:
+    """Pytree-registered codec state for one ExchangePlan.
+
+    ``bucket_states`` holds one entry per ``plan.schedule.stages`` (same
+    order): the empty tuple ``()`` for zero-state (stateless) codecs, a
+    flat f32 residual array for ErrorFeedback dense buckets.  Being a
+    registered pytree it jits, shards (leaves are flat 1-D arrays —
+    shard dim 0 over the data axes so every worker keeps ITS residual),
+    and checkpoints through the ordinary flat-key npz path.
+    """
+
+    __slots__ = ("bucket_states",)
+
+    def __init__(self, bucket_states):
+        self.bucket_states = tuple(bucket_states)
+
+    @property
+    def n_stages(self) -> int:
+        return len(self.bucket_states)
+
+    def tree_flatten_with_keys(self):
+        return ([(jax.tree_util.SequenceKey(i), s)
+                 for i, s in enumerate(self.bucket_states)], None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(children)
+
+    def __repr__(self):
+        kinds = ["-" if isinstance(s, tuple) and not s
+                 else getattr(s, "shape", s) for s in self.bucket_states]
+        return f"ExchangeState({kinds})"
 
 _DTYPE_ALIASES = {"bf16": "bfloat16", "f32": "float32", "fp32": "float32",
                   "f16": "float16", "fp16": "float16",
@@ -61,7 +123,15 @@ def dtype_bytes(dtype) -> int:
 
 
 class WireCodec:
-    """Protocol for wire formats.  Subclass and ``register_codec``."""
+    """Protocol for wire formats.  Subclass and ``register_codec``.
+
+    The stateless pair (``encode`` / ``decode``) is the legacy protocol;
+    the stateful methods below default to the ZERO-STATE ADAPTER (empty
+    state, pass-through), so stateless codecs — including third-party
+    ones implementing only ``encode``/``decode`` — ride the stateful
+    exchange path without modification.  See docs/exchange.md for the
+    migration guide and deprecation timeline.
+    """
 
     #: registry name
     name: str = "abstract"
@@ -71,6 +141,10 @@ class WireCodec:
     linear: bool = True
     #: bytes of side-tensor (scales) per encoded buffer
     scale_bytes: int = 0
+    #: True when the codec carries per-bucket memory across steps; the
+    #: training stack must then thread an ExchangeState through
+    #: exchange -> train step -> checkpoint
+    stateful: bool = False
 
     def wire_dtype(self, native_dtype: str) -> str:
         """Dtype of the encoded values buffer."""
@@ -90,6 +164,67 @@ class WireCodec:
         """Exact payload bytes (values + side scales) for ``n_elems``."""
         return (n_elems * dtype_bytes(self.wire_dtype(native_dtype))
                 + self.scale_bytes)
+
+    # -- stateful protocol (defaults = the zero-state adapter) --------------
+    def init_bucket_state(self, n_elems: int, kind: str = "dense") -> Any:
+        """Initial state for one schedule stage (``kind`` is the stage
+        kind, "dense" or "gather").  ``()`` = no state (no pytree
+        leaves, so checkpoints and jit signatures are unchanged)."""
+        del n_elems, kind
+        return ()
+
+    def init_state(self, plan, n_workers: int = 1) -> ExchangeState:
+        """Build the full ExchangeState for an ``ExchangePlan`` — one
+        ``init_bucket_state`` entry per schedule stage.  ``n_workers``
+        sizes each leaf for the GLOBAL view under ``shard_map``: leaves
+        are flat 1-D arrays of ``n_workers * n_elems`` sharded over dim
+        0, so every worker sees its own ``n_elems`` slice."""
+        reps = max(int(n_workers), 1)
+        return ExchangeState([
+            self.init_bucket_state(plan.stage_n_elems(stage) * reps,
+                                   kind=stage.kind)
+            for stage in plan.schedule.stages])
+
+    def state_bytes(self, n_elems: int, kind: str = "dense") -> int:
+        """Per-worker codec-state memory for one stage (accounting)."""
+        del n_elems, kind
+        return 0
+
+    def encode_stateful(self, buf: jax.Array, state: Any,
+                        use_kernel: bool = False
+                        ) -> Tuple[jax.Array, Optional[jax.Array], Any]:
+        """Stateful encode: ``(wire, scales, new state)``.  The default
+        is the zero-state adapter — the stateless ``encode`` with the
+        state passed through untouched."""
+        wire, scale = self.encode(buf, use_kernel=use_kernel)
+        return wire, scale, state
+
+    def requantize(self, buf: jax.Array, use_kernel: bool = False
+                   ) -> Tuple[jax.Array, Optional[jax.Array]]:
+        """Re-encode a partially reduced buffer between mesh levels (the
+        hierarchical per-hop path).  Stateless by construction: hop > 0
+        quantisation error is replicated across the already-reduced
+        group, so it must NOT enter the (per-worker) feedback state."""
+        return self.encode(buf, use_kernel=use_kernel)
+
+    def encode_hop(self, buf: jax.Array, state: Any, level: int,
+                   use_kernel: bool = False
+                   ) -> Tuple[jax.Array, Optional[jax.Array], Any]:
+        """Hop-``level`` encode for hierarchical reduction: level 0 is
+        the worker-local encode (consumes/updates the feedback state);
+        later levels requantize the partial sums statelessly."""
+        if level == 0:
+            return self.encode_stateful(buf, state, use_kernel=use_kernel)
+        wire, scale = self.requantize(buf, use_kernel=use_kernel)
+        return wire, scale, state
+
+    def reduce_hop(self, gathered_wire: jax.Array,
+                   gathered_scales: Optional[jax.Array], n_chunks: int,
+                   native_dtype) -> jax.Array:
+        """Decode one hop's ``n_chunks`` gathered payloads and sum them
+        (the per-level reduction of the hierarchical path)."""
+        return sum_decoded(self, gathered_wire, gathered_scales, n_chunks,
+                           native_dtype)
 
     def __repr__(self):
         return f"{type(self).__name__}({self.name!r})"
@@ -169,15 +304,87 @@ class Int8Codec(WireCodec):
         return absmax / self.QMAX / 2 + 1e-12
 
 
+class ErrorFeedbackCodec(WireCodec):
+    """Wrap any stateless codec with per-bucket quantisation-error
+    memory (EF-SGD / 1-bit-Adam construction).
+
+    Each step encodes ``compensated = grad + residual`` through the
+    inner codec and banks the NEW round-trip error
+    ``compensated - decode(encode(compensated))`` as next step's
+    residual — so wire error is fed back instead of discarded, and the
+    long-run update converges to the uncompressed one.
+
+    State lives per DENSE fusion bucket (one flat f32 residual of the
+    bucket's ``n_elems``); sparse gather buckets stay zero-state — their
+    rows are token-addressed and change identity every step, so a
+    positional residual has nothing stable to compensate.  Linearity,
+    wire dtype and scale accounting all delegate to the inner codec, so
+    the plan's collective selection and wire-byte accounting are those
+    of the inner wire; the residual adds zero wire bytes.
+    """
+
+    stateful = True
+
+    def __init__(self, inner: "WireCodec"):
+        if inner.stateful:
+            raise ValueError(f"cannot stack error feedback on the "
+                             f"already-stateful codec {inner.name!r}")
+        self.inner = inner
+        self.name = inner.name + EF_SUFFIX
+        self.linear = inner.linear
+        self.scale_bytes = inner.scale_bytes
+
+    def wire_dtype(self, native_dtype: str) -> str:
+        return self.inner.wire_dtype(native_dtype)
+
+    # stateless fallbacks (gather stages, broadcast) delegate inward
+    def encode(self, buf, use_kernel: bool = False):
+        return self.inner.encode(buf, use_kernel=use_kernel)
+
+    def decode(self, wire, scale, native_dtype):
+        return self.inner.decode(wire, scale, native_dtype)
+
+    def init_bucket_state(self, n_elems: int, kind: str = "dense"):
+        if kind != "dense":
+            return ()
+        return jnp.zeros((n_elems,), jnp.float32)
+
+    def state_bytes(self, n_elems: int, kind: str = "dense") -> int:
+        return 4 * n_elems if kind == "dense" else 0
+
+    def encode_stateful(self, buf, state, use_kernel: bool = False):
+        if isinstance(state, tuple) and not state:   # zero-state stage
+            wire, scale = self.inner.encode(buf, use_kernel=use_kernel)
+            return wire, scale, state
+        compensated = buf.astype(jnp.float32) + state
+        wire, scale = self.inner.encode(compensated,
+                                        use_kernel=use_kernel)
+        decoded = self.inner.decode(wire, scale, jnp.float32)
+        residual = compensated - decoded.reshape(compensated.shape)
+        return wire, scale, residual
+
+    def max_error(self, buf) -> float:
+        return self.inner.max_error(buf)
+
+
 # ---------------------------------------------------------------------------
 # Registry
 # ---------------------------------------------------------------------------
 
 _CODECS: Dict[str, WireCodec] = {}
 
+#: lazily built ErrorFeedback wrappers, keyed by full "<inner>+ef" name.
+#: Kept OUT of _CODECS so ``available_codecs()`` stays the base list
+#: (every base codec supports the suffix; listing both would double it).
+_EF_CACHE: Dict[str, WireCodec] = {}
+
 
 def register_codec(codec: WireCodec, name: Optional[str] = None) -> None:
-    _CODECS[name or codec.name] = codec
+    key = name or codec.name
+    _CODECS[key] = codec
+    # a cached "<name>+ef" wrapper would keep encoding with the codec
+    # this call just replaced
+    _EF_CACHE.pop(key + EF_SUFFIX, None)
 
 
 register_codec(IdentityCodec())
@@ -208,12 +415,19 @@ def get_codec(name) -> WireCodec:
 
     Dtype-ish names ('bfloat16', 'float16', ...) resolve to a CastCodec
     so the deprecated ``wire_dtype=`` shim keeps accepting any numpy
-    dtype name.
+    dtype name.  An ``+ef`` suffix ("int8+ef") wraps the named codec in
+    ``ErrorFeedbackCodec`` (cached, so repeated lookups share one
+    instance and one plan-cache identity).
     """
     if isinstance(name, WireCodec):
         return name
     if name is None:
         return _CODECS["identity"]
+    if isinstance(name, str) and name.endswith(EF_SUFFIX):
+        if name not in _EF_CACHE:
+            _EF_CACHE[name] = ErrorFeedbackCodec(
+                get_codec(name[:-len(EF_SUFFIX)]))
+        return _EF_CACHE[name]
     if name in _CODECS:
         return _CODECS[name]
     dt = canonical_dtype(name)       # raises ValueError on garbage

@@ -35,6 +35,7 @@ import warnings
 from typing import Optional, Union
 
 from repro.core import comm, exchange
+from repro.core.codecs import ExchangeState
 from repro.core.exchange import ExchangeConfig
 from repro.optim.base import Optimizer
 
@@ -63,16 +64,28 @@ class ExchangeStats:
     n_stages: int = 1            # BucketSchedule stages (1 bucket each)
     overlap: bool = False        # staged launch-all-then-unpack schedule?
     schedule_table: str = ""     # plan.describe_schedule(n_workers)
+    state_bytes: int = 0         # per-worker codec-state memory (residuals)
+    state_bytes_per_bucket: tuple = ()   # same, stage by stage
+    hop_wire_bytes: tuple = ()   # per-mesh-level wire (hierarchical runs)
 
     def describe(self) -> str:
         """One-look summary of what the exchange will actually run:
-        strategy, totals, and the per-stage BucketSchedule."""
+        strategy, totals, codec-state memory, and the per-stage
+        BucketSchedule (with per-hop wire on hierarchical runs)."""
         head = (f"exchange: strategy={self.strategy} "
                 f"collectives={self.n_collectives} "
                 f"wire_bytes/worker={self.wire_bytes} "
                 f"accumulated_bytes={self.accumulated_bytes} "
                 f"stages={self.n_stages} "
                 f"overlap={'on' if self.overlap else 'off'}")
+        if self.state_bytes:
+            per = ",".join(str(b) for b in self.state_bytes_per_bucket)
+            head += (f"\ncodec state: {self.state_bytes} B/worker "
+                     f"residual memory (per bucket: [{per}])")
+        if len(self.hop_wire_bytes) > 1:
+            hops = ", ".join(f"L{k}={b}"
+                             for k, b in enumerate(self.hop_wire_bytes))
+            head += f"\nper-hop wire B/worker (outermost first): {hops}"
         if self.schedule_table:
             return head + "\n" + self.schedule_table
         return head
@@ -117,6 +130,22 @@ class DistributedOptimizer:
         dense = self.exchange(grads)
         return self.base.update(dense, state, params)
 
+    # -- codec state (stateful WireCodecs) -----------------------------------
+    @property
+    def stateful(self) -> bool:
+        """True when the configured codec carries per-bucket memory and
+        an ExchangeState must be threaded through exchange calls."""
+        return self._exchange_config.codec_obj.stateful
+
+    def init_exchange_state(self, grads,
+                            n_workers: int = 1) -> ExchangeState:
+        """Initial codec state for this gradient-tree structure (zero
+        residuals; the empty pytree for stateless codecs).  ``grads``
+        may be concrete arrays, tracers, or ShapeDtypeStructs.  Under
+        ``shard_map`` pass ``n_workers`` and shard every state leaf over
+        dim 0 so each worker keeps its own residual slice."""
+        return self.plan(grads).init_state(n_workers=n_workers)
+
     # -- the plan ------------------------------------------------------------
     @property
     def exchange_config(self) -> ExchangeConfig:
@@ -142,26 +171,33 @@ class DistributedOptimizer:
         densification into packing)."""
         return self.plan(grads).accumulate_tree(grads)
 
-    def exchange(self, grads):
+    def exchange(self, grads, state: Optional[ExchangeState] = None):
         """Steps 1-3: accumulate, cross-worker exchange, densify.
-        Honours ``exchange_config.overlap`` (staged vs fused)."""
+        Honours ``exchange_config.overlap`` (staged vs fused).  With
+        ``state=`` returns ``(dense tree, new ExchangeState)`` — the
+        stateful-codec contract; without it, stateless codecs keep the
+        legacy tree-only return."""
         return self.plan(grads).execute(grads, self.axis_name,
-                                        average=self.average)
+                                        average=self.average, state=state)
 
-    def exchange_scheduled(self, grads):
+    def exchange_scheduled(self, grads,
+                           state: Optional[ExchangeState] = None):
         """Staged exchange, regardless of ``overlap``: every stage's
         collective launches (in reverse-layer readiness order,
         interleaved with the per-stage accumulation/pack compute)
         before any stage unpacks — the overlap path the training stack
         consumes on the final microbatch."""
         return self.plan(grads).execute_scheduled(grads, self.axis_name,
-                                                  average=self.average)
+                                                  average=self.average,
+                                                  state=state)
 
-    def exchange_fused(self, grads):
+    def exchange_fused(self, grads,
+                       state: Optional[ExchangeState] = None):
         """Serial reference path: each bucket finishes before the next
         launches (regardless of ``overlap``)."""
         return self.plan(grads).execute_fused(grads, self.axis_name,
-                                              average=self.average)
+                                              average=self.average,
+                                              state=state)
 
     def broadcast(self, tree, root: int = 0):
         """Broadcast a (dense) pytree from worker ``root`` through the
@@ -190,4 +226,7 @@ class DistributedOptimizer:
             strategy=strategy,
             n_stages=plan.schedule.n_stages,
             overlap=cfg.overlap,
-            schedule_table=plan.describe_schedule(n_workers))
+            schedule_table=plan.describe_schedule(n_workers),
+            state_bytes=plan.state_bytes(),
+            state_bytes_per_bucket=plan.state_bytes_per_stage(),
+            hop_wire_bytes=plan.hop_wire_bytes(n_workers))

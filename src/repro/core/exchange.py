@@ -56,7 +56,7 @@ import jax.numpy as jnp
 from repro.core import accumulation, backend as backend_lib, codecs, comm, \
     fusion
 from repro.core.backend import ALLGATHER, ALLREDUCE, REDUCE_SCATTER
-from repro.core.codecs import canonical_dtype
+from repro.core.codecs import ExchangeState, canonical_dtype
 from repro.core.indexed_slices import IndexedSlices, concat_slices
 
 # ---------------------------------------------------------------------------
@@ -91,6 +91,8 @@ class ExchangeConfig:
     #                                      bucket collective before any
     #                                      unpack, interleaved with the
     #                                      remaining accumulation compute
+    error_feedback: bool = False         # wrap codec in ErrorFeedbackCodec
+    #                                      (normalised onto codec="<x>+ef")
     # -- deprecated spellings, folded into codec/backend ---------------------
     wire_dtype: Optional[str] = None     # -> codec=<cast codec>
     hierarchical: bool = False           # -> backend="hierarchical"
@@ -107,6 +109,12 @@ class ExchangeConfig:
                     f"codec={self.codec!r}")
             object.__setattr__(self, "codec", mapped)
             object.__setattr__(self, "wire_dtype", None)
+        if self.error_feedback:
+            name = codecs.get_codec(self.codec).name
+            if not name.endswith(codecs.EF_SUFFIX):
+                name += codecs.EF_SUFFIX
+            object.__setattr__(self, "codec", name)
+            object.__setattr__(self, "error_feedback", False)
         if self.hierarchical:
             if self.backend not in ("jax", "hierarchical"):
                 raise ValueError(
@@ -123,6 +131,11 @@ class ExchangeConfig:
                     f"codec {self.codec!r} is non-linear (quantised wires "
                     f"cannot be reduced in flight) and has no "
                     f"reduce_scatter path; use the default allreduce")
+            if self.codec_obj.stateful:
+                raise ValueError(
+                    f"codec {self.codec!r} is stateful; the RS+AG "
+                    f"decomposition has no stateful encode hook — use "
+                    f"the default allreduce")
             if self.backend == "hierarchical":
                 raise ValueError("hierarchical backend has no RS+AG path; "
                                  "use backend='jax' or 'ringsim'")
@@ -377,8 +390,11 @@ class ExchangePlan:
         if not self.config.codec_obj.linear:
             # non-linear codecs never reduce in flight: every bucket is
             # one values allgather + one scales allgather, whatever its
-            # nominal kind or backend (same convention that bills RS+AG
-            # as 2)
+            # nominal kind (same convention that bills RS+AG as 2).  On
+            # the hierarchical backend DENSE buckets run one such
+            # (gather, reduce, requantize) round per mesh level.
+            if stage.kind == "dense" and self.config.is_hierarchical:
+                return 2 * self.config.hierarchy_levels
             return 2
         be = self.config.backend_obj
         nl = self.config.hierarchy_levels
@@ -389,15 +405,26 @@ class ExchangePlan:
 
     def stage_wire_bytes(self, stage: BucketStage,
                          n_workers: Union[int, Sequence[int]]) -> int:
-        """Bytes one stage moves per worker."""
+        """Bytes one stage moves per worker (sum over mesh-level hops)."""
+        return sum(self.stage_hop_wire_bytes(stage, n_workers))
+
+    def stage_hop_wire_bytes(self, stage: BucketStage,
+                             n_workers: Union[int, Sequence[int]]
+                             ) -> Tuple[int, ...]:
+        """Per-mesh-level wire bytes for one stage, in ``levels`` order
+        (outermost first, matching the hierarchical ``n_workers``
+        tuple).  Flat backends report a single hop; the hierarchical
+        backend bills each level's collective separately — for
+        non-linear codecs that is the per-hop requantized payload, NOT
+        a full-mesh gather."""
         levels = self._levels(n_workers)
         be = self.config.backend_obj
         if stage.kind == "dense":
             b = self.dense_buckets[stage.bucket_id]
-            return be.dense_wire_bytes(b.collective, b.n_elems,
-                                       b.wire_dtype, self.config.codec_obj,
-                                       levels)
-        return be.gather_wire_bytes(
+            return be.dense_hop_wire_bytes(b.collective, b.n_elems,
+                                           b.wire_dtype,
+                                           self.config.codec_obj, levels)
+        return be.gather_hop_wire_bytes(
             self._gather_payload_bytes(self.leaf_specs[stage.bucket_id]),
             levels)
 
@@ -455,6 +482,31 @@ class ExchangePlan:
         values [+ codec scales])."""
         return sum(self.stage_hlo_collectives(s, n_workers)
                    for s in self.schedule.stages)
+
+    def hlo_allgather_factor(self, n_workers: Union[int, Sequence[int]]
+                             ) -> Optional[float]:
+        """Predicted wire/result-bytes ratio over every hop that lowers
+        to an HLO all-gather: gather buckets at every mesh level plus,
+        for non-linear codecs, the dense buckets' per-hop requantize
+        gathers.  Each such hop's result is ``p_k`` group payloads for
+        ``(p_k - 1)`` on the wire, so the aggregate is the wire-weighted
+        mix of ``(p_k - 1)/p_k`` — NOT uniform when requantize hops
+        (constant payload per hop) and telescoping gather hops (payload
+        grows with the prefix product) coexist in one plan.  ``None``
+        when nothing lowers to an all-gather; backends fall back to
+        their uniform single-kind factor."""
+        levels = self._levels(n_workers)
+        codec = self.config.codec_obj
+        wire = result = 0.0
+        for s in self.schedule.stages:
+            if s.kind == "dense" and codec.linear:
+                continue                   # psum / RS+AG, not a pure gather
+            hops = self.stage_hop_wire_bytes(s, n_workers)
+            for wk, pk in zip(hops, levels):
+                if pk > 1:
+                    wire += wk
+                    result += wk * pk / (pk - 1)
+        return wire / result if result else None
 
     def buffer_bytes(self, n_workers: Union[int, Sequence[int]]) -> int:
         """Size of the accumulated representation each worker holds after
@@ -522,14 +574,22 @@ class ExchangePlan:
         mode = "overlap" if self.config.overlap else "fused"
         lines = [f"schedule: {sch.n_stages} stages ({mode}), launch "
                  f"order reverse-layer (descending readiness key)"]
+        state_per_stage = self.state_bytes_per_stage()
         for k, st in enumerate(sch.stages):
             wire = ""
             if n_workers is not None:
                 wire = f", {self.stage_wire_bytes(st, n_workers)} wire B"
+            state = (f", {state_per_stage[k]} state B"
+                     if state_per_stage[k] else "")
             lines.append(
                 f"  stage {k}: {st.kind} bucket {st.bucket_id}, "
                 f"{len(st.leaf_ids)} leaves (ready@{st.ready_key}), "
-                f"{self.stage_collectives(st)} collectives{wire}")
+                f"{self.stage_collectives(st)} collectives{wire}{state}")
+        if n_workers is not None and self.config.is_hierarchical:
+            hops = self.hop_wire_bytes(n_workers)
+            lines.append("  per-hop wire B (outermost level first): "
+                         + ", ".join(f"L{k}={b}"
+                                     for k, b in enumerate(hops)))
         return "\n".join(lines)
 
     # -- execution -----------------------------------------------------------
@@ -553,11 +613,14 @@ class ExchangePlan:
                     ) -> jax.Array:
         """Fuse a bucket into one 1-D buffer.  Densification of
         deferred-sparse slots happens HERE (Pallas kernel if configured),
-        fused with the codec's narrowing cast.  Linear codecs pack
-        straight into the wire dtype; non-linear codecs pack f32 and
-        quantise afterwards (``codec.encode`` needs the full-precision
-        buffer for its absmax scale)."""
-        pack_dtype = (bucket.wire_dtype if self.config.codec_obj.linear
+        fused with the codec's narrowing cast.  Stateless linear codecs
+        pack straight into the wire dtype; non-linear and stateful
+        codecs pack f32 and encode afterwards (``codec.encode`` needs
+        the full-precision buffer for its absmax scale, and stateful
+        encodes add the f32 residual before narrowing)."""
+        codec = self.config.codec_obj
+        pack_dtype = (bucket.wire_dtype
+                      if codec.linear and not codec.stateful
                       else "float32")
         parts = []
         for slot in bucket.slots:
@@ -635,41 +698,86 @@ class ExchangePlan:
             x = x * inv_scale
         out[stage.bucket_id] = x
 
+    def _hop_reduce_dense(self, buf: jax.Array, bstate,
+                          axes: Tuple[str, ...]) -> Tuple[jax.Array, Any]:
+        """Per-hop requantizing hierarchical reduction of one packed f32
+        bucket: innermost axis first, each level runs encode -> gather
+        -> decode-sum, and the partial sum is RE-ENCODED (``requantize``)
+        before the next level — so no full-mesh gather ever happens and
+        every hop moves the quantised payload.  Hop 0 is the only
+        stateful encode (error feedback compensates the worker-local
+        quantisation; later hops' error is group-replicated)."""
+        codec = self.config.codec_obj
+        be = self.config.backend_obj
+        for level, ax in enumerate(reversed(axes)):
+            wire, scale, bstate = codec.encode_hop(
+                buf, bstate, level, use_kernel=self.config.use_kernel)
+            p_ax = comm.axis_size((ax,))
+            g_wire = be.all_gather(wire, (ax,))
+            g_scale = (be.all_gather(scale, (ax,))
+                       if scale is not None else None)
+            buf = codec.reduce_hop(g_wire, g_scale, p_ax, jnp.float32)
+        return buf, bstate
+
     def _launch_dense(self, stage: BucketStage, leaves: List[Any],
-                      axes: Tuple[str, ...], p: int) -> Tuple:
+                      axes: Tuple[str, ...], p: int, bstate
+                      ) -> Tuple[Tuple, Any]:
         """Pack one dense bucket (densify fused) and issue its
         collective(s).  Linear codecs return the fully reduced buffer;
-        non-linear codecs return the gathered (wire, scales) pair whose
-        decode-reduction happens at finish."""
+        non-linear codecs on flat backends return the gathered (wire,
+        scales) pair whose decode-reduction happens at finish; on the
+        hierarchical backend they run the per-hop requantizing
+        reduction and return the already-reduced f32 buffer.  ``bstate``
+        is this stage's codec state; returns (inflight, new state)."""
         bucket = self.dense_buckets[stage.bucket_id]
         codec = self.config.codec_obj
         be = self.config.backend_obj
         buf = self.pack_bucket(bucket, leaves)
-        if codec.linear:
+        if codec.linear and not codec.stateful:
             if not axes:
-                return (buf,)
+                return (buf,), bstate
             if bucket.collective == REDUCE_SCATTER:
                 pad = -len(buf) % p
                 if pad:
                     buf = jnp.pad(buf, (0, pad))
                 shard = be.reduce_scatter(buf, axes)
-                return (be.all_gather(shard, axes)[:bucket.n_elems],)
-            return (be.all_reduce(buf, axes),)
-        # non-linear (quantised) codec: workers quantise against their
-        # own absmax scale, so the wire cannot be reduced in flight —
-        # allgather (values, scales) and reduce after decode (at finish)
-        wire, scale = codec.encode(buf, use_kernel=self.config.use_kernel)
+                return (be.all_gather(shard, axes)[:bucket.n_elems],), \
+                    bstate
+            return (be.all_reduce(buf, axes),), bstate
+        if not codec.linear and self.config.is_hierarchical and axes \
+                and len(axes) > 1:
+            red, bstate = self._hop_reduce_dense(buf, bstate, axes)
+            return (red,), bstate
+        wire, scale, bstate = codec.encode_stateful(
+            buf, bstate, use_kernel=self.config.use_kernel)
+        if codec.linear:
+            # stateful linear (e.g. bf16+ef): the compensated wire still
+            # sums in flight; decode is the unpack upcast
+            if scale is not None:
+                raise ValueError(f"linear codec {codec.name!r} returned "
+                                 f"side scales; scales cannot be summed "
+                                 f"in flight")
+            if not axes:
+                return (wire,), bstate
+            return (be.all_reduce(wire, axes),), bstate
+        # non-linear (quantised) codec on a flat backend: workers
+        # quantise against their own absmax scale, so the wire cannot be
+        # reduced in flight — allgather (values, scales) and reduce
+        # after decode (at finish)
         if not axes:
-            return (codec.decode(wire, scale, jnp.float32),)
-        return (be.all_gather(wire, axes), be.all_gather(scale, axes))
+            return (codec.decode(wire, scale, jnp.float32),), bstate
+        return (be.all_gather(wire, axes), be.all_gather(scale, axes)), \
+            bstate
 
     def _finish_dense(self, stage: BucketStage, inflight: Tuple,
                       out: List[Any], inv_scale, axes: Tuple[str, ...],
                       p: int) -> None:
-        """Reduce-after-decode (non-linear) + unpack one dense bucket."""
+        """Reduce-after-decode (non-linear) + unpack one dense bucket.
+        Single-element payloads are already reduced (linear collectives,
+        the local path, and the hierarchical per-hop reduction)."""
         bucket = self.dense_buckets[stage.bucket_id]
         codec = self.config.codec_obj
-        if codec.linear or not axes:
+        if len(inflight) == 1:
             buf = inflight[0]
         else:
             buf = codecs.sum_decoded(codec, inflight[0], inflight[1], p,
@@ -677,13 +785,16 @@ class ExchangePlan:
         self.unpack_bucket(bucket, buf, out, inv_scale)
 
     def launch_stage(self, stage: BucketStage, leaves: List[Any],
-                     axes: Tuple[str, ...], p: int) -> Tuple:
-        """Pack + issue one stage's collective(s); returns the in-flight
-        payload ``finish_stage`` consumes.  ``leaves`` must hold the
-        accumulated representation for every id in ``stage.leaf_ids``."""
+                     axes: Tuple[str, ...], p: int, bstate: Any = ()
+                     ) -> Tuple[Tuple, Any]:
+        """Pack + issue one stage's collective(s); returns ``(inflight,
+        new bucket state)`` — the payload ``finish_stage`` consumes plus
+        this stage's updated codec state (passed through untouched for
+        zero-state codecs).  ``leaves`` must hold the accumulated
+        representation for every id in ``stage.leaf_ids``."""
         if stage.kind == "dense":
-            return self._launch_dense(stage, leaves, axes, p)
-        return self._launch_gather(stage, leaves, axes)
+            return self._launch_dense(stage, leaves, axes, p, bstate)
+        return self._launch_gather(stage, leaves, axes), bstate
 
     def finish_stage(self, stage: BucketStage, inflight: Tuple,
                      out: List[Any], inv_scale, axes: Tuple[str, ...],
@@ -721,8 +832,72 @@ class ExchangePlan:
             acc[i] = _accumulate_leaf(raw[i], self.leaf_specs[i],
                                       self.config)
 
+    # -- codec state ---------------------------------------------------------
+    def init_state(self, n_workers: int = 1) -> ExchangeState:
+        """Initial codec state: one entry per schedule stage (the empty
+        tuple for zero-state codecs — no pytree leaves — so stateless
+        configs see no new arrays anywhere).  ``n_workers`` builds the
+        GLOBAL view for ``shard_map``: leaves are flat arrays of
+        ``n_workers * n_elems`` to be sharded over dim 0, giving every
+        worker its own residual slice."""
+        return self.config.codec_obj.init_state(self, n_workers=n_workers)
+
+    def stage_n_elems(self, stage: BucketStage) -> int:
+        """Per-worker element count of one stage's payload — the size
+        codec state (``WireCodec.init_state``) and its byte accounting
+        are both keyed on, so the two cannot drift."""
+        if stage.kind == "dense":
+            return self.dense_buckets[stage.bucket_id].n_elems
+        spec = self.leaf_specs[stage.bucket_id]
+        return spec.rows * spec.row_elems
+
+    def state_bytes_per_stage(self) -> Tuple[int, ...]:
+        """Per-worker codec-state memory, stage by stage (ExchangeStats
+        accounting: residual bytes per bucket)."""
+        codec = self.config.codec_obj
+        return tuple(codec.state_bytes(self.stage_n_elems(s), kind=s.kind)
+                     for s in self.schedule.stages)
+
+    def state_bytes(self) -> int:
+        """Total per-worker codec-state memory (0 for stateless)."""
+        return sum(self.state_bytes_per_stage())
+
+    def hop_wire_bytes(self, n_workers: Union[int, Sequence[int]]
+                       ) -> Tuple[int, ...]:
+        """Per-mesh-level wire bytes (``levels`` order, outermost
+        first), summed over stages — sums to ``wire_bytes``.  Flat
+        backends report one hop; hierarchical runs expose where the
+        per-hop requantize saves its bytes."""
+        levels = self._levels(n_workers)
+        out = [0] * len(levels)
+        for stage in self.schedule.stages:
+            for k, b in enumerate(self.stage_hop_wire_bytes(stage,
+                                                            n_workers)):
+                out[k] += b
+        return tuple(out)
+
+    def _check_state(self, state) -> Optional[ExchangeState]:
+        codec = self.config.codec_obj
+        if state is None:
+            if codec.stateful:
+                raise ValueError(
+                    f"codec {codec.name!r} is stateful: pass "
+                    f"state=plan.init_state() and thread the returned "
+                    f"state into the next step (see docs/exchange.md)")
+            return None
+        if not isinstance(state, ExchangeState):
+            raise TypeError(f"state must be an ExchangeState, got "
+                            f"{type(state).__name__}")
+        if state.n_stages != self.schedule.n_stages:
+            raise ValueError(
+                f"ExchangeState has {state.n_stages} stage entries but "
+                f"the plan schedules {self.schedule.n_stages} — state "
+                f"from a different plan?")
+        return state
+
     def execute(self, grads, axis_name: comm.AxisNames,
-                average: bool = True):
+                average: bool = True,
+                state: Optional[ExchangeState] = None):
         """Steps 1-3: accumulate, exchange per the BucketSchedule,
         densify.  Honours ``config.overlap``: the staged path launches
         every stage's collective before any unpack so collectives
@@ -731,6 +906,11 @@ class ExchangePlan:
         Both are the SAME per-stage ops, so results are bitwise
         identical for linear codecs.
 
+        With ``state=`` (an ``ExchangeState``) returns ``(tree, new
+        state)`` — required for stateful codecs, a bitwise no-op pass-
+        through for stateless ones.  Without it, stateless codecs keep
+        the legacy tree-only return and stateful codecs raise.
+
         Must be called under ``shard_map``/``pjit`` with the mesh axes
         bound (or with ``axis_name=None`` for the local path — the codec
         round-trip still runs so single-device tests see the same wire
@@ -738,43 +918,66 @@ class ExchangePlan:
         """
         if self.config.overlap:
             return self.execute_scheduled(grads, axis_name,
-                                          average=average)
-        return self.execute_fused(grads, axis_name, average=average)
+                                          average=average, state=state)
+        return self.execute_fused(grads, axis_name, average=average,
+                                  state=state)
+
+    def _stage_states(self, state: Optional[ExchangeState]) -> Tuple:
+        if state is None:
+            return ((),) * self.schedule.n_stages
+        return state.bucket_states
 
     def execute_fused(self, grads, axis_name: comm.AxisNames,
-                      average: bool = True):
+                      average: bool = True,
+                      state: Optional[ExchangeState] = None):
         """Serial reference path: each stage is accumulated, launched,
         and finished before the next stage starts."""
+        state = self._check_state(state)
         raw, axes, p, inv_scale = self._exchange_setup(grads, axis_name,
                                                        average)
         acc: List[Any] = [None] * self.n_leaves
         out: List[Any] = [None] * self.n_leaves
-        for stage in self.schedule.stages:
+        new_states: List[Any] = []
+        for stage, bs in zip(self.schedule.stages,
+                             self._stage_states(state)):
             self._accumulate_stage(stage, raw, acc)
-            inflight = self.launch_stage(stage, acc, axes, p)
+            inflight, nb = self.launch_stage(stage, acc, axes, p, bs)
+            new_states.append(nb)
             self.finish_stage(stage, inflight, out, inv_scale, axes, p)
         # every leaf is exactly one stage's output: nothing pending here
-        return jax.tree_util.tree_unflatten(self.treedef, out)
+        tree = jax.tree_util.tree_unflatten(self.treedef, out)
+        if state is None:
+            return tree
+        return tree, ExchangeState(new_states)
 
     def execute_scheduled(self, grads, axis_name: comm.AxisNames,
-                          average: bool = True):
+                          average: bool = True,
+                          state: Optional[ExchangeState] = None):
         """Overlap path: stages launch in reverse-layer readiness order,
         each stage's accumulate+pack interleaved AFTER the previous
         stage's collective is already in flight; unpacks run once every
         collective has been issued.  XLA's latency-hiding scheduler can
         then hide stage k's collective behind stage k+1's
         densify/pack compute."""
+        state = self._check_state(state)
         raw, axes, p, inv_scale = self._exchange_setup(grads, axis_name,
                                                        average)
         acc: List[Any] = [None] * self.n_leaves
         inflight: List[Tuple] = []
-        for stage in self.schedule.stages:
+        new_states: List[Any] = []
+        for stage, bs in zip(self.schedule.stages,
+                             self._stage_states(state)):
             self._accumulate_stage(stage, raw, acc)
-            inflight.append(self.launch_stage(stage, acc, axes, p))
+            fl, nb = self.launch_stage(stage, acc, axes, p, bs)
+            inflight.append(fl)
+            new_states.append(nb)
         out: List[Any] = [None] * self.n_leaves
         for stage, fl in zip(self.schedule.stages, inflight):
             self.finish_stage(stage, fl, out, inv_scale, axes, p)
-        return jax.tree_util.tree_unflatten(self.treedef, out)
+        tree = jax.tree_util.tree_unflatten(self.treedef, out)
+        if state is None:
+            return tree
+        return tree, ExchangeState(new_states)
 
     def broadcast(self, tree, axis_name: comm.AxisNames, root: int = 0):
         """Broadcast a pytree (e.g. refreshed serving weights) from

@@ -253,6 +253,7 @@ def audit_exchange_plan(arch: str = "transformer-big", n_workers: int = 8,
                         codec: str = "identity",
                         backend: str = "jax",
                         overlap: bool = False,
+                        error_feedback: bool = False,
                         batch_per_worker: int = 2,
                         seq_len: int = 32) -> Dict[str, Any]:
     """Check the static ExchangePlan against lowered HLO.
@@ -274,6 +275,14 @@ def audit_exchange_plan(arch: str = "transformer-big", n_workers: int = 8,
     additionally checks that the schedule's per-stage collective counts
     sum to the fused plan's ``n_collectives`` — overlap must reorder,
     never add or drop, collectives.
+
+    Non-linear codecs on ``backend="hierarchical"`` lower the per-hop
+    requantizing reduction (one gather + decode-sum + re-encode per
+    mesh axis, never a full-mesh gather); the per-hop wire is billed by
+    ``plan.stage_hop_wire_bytes`` and must stay exact against the HLO.
+    Stateful codecs (``error_feedback=True`` or a ``+ef`` codec name)
+    lower with their ExchangeState threaded through the jitted exchange
+    — residual feedback must add ZERO collectives and ZERO wire bytes.
     """
     import numpy as np
     from jax.sharding import Mesh, PartitionSpec as P
@@ -301,24 +310,42 @@ def audit_exchange_plan(arch: str = "transformer-big", n_workers: int = 8,
             sparse_as_dense=sparse_as_dense, algorithm=algorithm,
             fusion_threshold=fusion_threshold,
             reduce_scatter=reduce_scatter, wire_dtype=wire_dtype,
-            codec=codec, backend=backend, overlap=overlap),
+            codec=codec, backend=backend, overlap=overlap,
+            error_feedback=error_feedback),
         axis_name=axis_name)
     plan = opt.plan(grads)
 
     # opt.exchange honours overlap: fused serial order, or the staged
-    # launch-all-then-unpack schedule
-    ex = shard_map(opt.exchange, mesh=mesh, in_specs=(P(),),
-                   out_specs=P(), check_rep=False)
-    hlo = jax.jit(ex).lower(grads).compile().as_text()
+    # launch-all-then-unpack schedule.  Stateful codecs lower with the
+    # ExchangeState threaded through (sharded over dim 0, one residual
+    # slice per worker) — exactly the train step's calling convention.
+    if plan.config.codec_obj.stateful:
+        state0 = plan.init_state(n_workers=n_workers)
+
+        def ex_fn(g, s):
+            return opt.exchange(g, state=s)
+
+        ex = shard_map(ex_fn, mesh=mesh,
+                       in_specs=(P(), P(axis_name)),
+                       out_specs=(P(), P(axis_name)), check_rep=False)
+        lower_args = (grads, state0)
+    else:
+        ex = shard_map(opt.exchange, mesh=mesh, in_specs=(P(),),
+                       out_specs=P(), check_rep=False)
+        lower_args = (grads,)
+    hlo = jax.jit(ex).lower(*lower_args).compile().as_text()
     counts = hlo_lib.count_collectives(hlo)
     coll_bytes = {k: v for k, v in hlo_lib.analyze_collectives(hlo).items()
                   if k != "__bytes__"}
 
     # per-op ring wire bytes implied by the HLO result sizes, under the
-    # configured backend's lowering
+    # configured backend's lowering (codec-aware: per-hop requantize
+    # gathers bill a different all-gather factor than telescoping ones)
     p = n_workers
     levels = workers if isinstance(workers, tuple) else (workers,)
-    hlo_wire = plan.config.backend_obj.hlo_wire_estimate(coll_bytes, levels)
+    hlo_wire = plan.config.backend_obj.hlo_wire_estimate(
+        coll_bytes, levels, codec=plan.config.codec_obj,
+        ag_factor=plan.hlo_allgather_factor(workers))
 
     expected_hlo_ops = plan.hlo_collectives(workers)
     hlo_ops = sum(counts.values())
@@ -357,6 +384,7 @@ def audit_exchange_plan(arch: str = "transformer-big", n_workers: int = 8,
         arch=arch, reduced=reduced, n_workers=p, audit_mode="shard_map",
         codec=plan.config.codec, backend=plan.config.backend,
         overlap=plan.config.overlap,
+        stateful=plan.config.codec_obj.stateful,
         strategy=opt.exchange_stats(grads, workers).strategy,
         planned_n_collectives=plan.n_collectives,
         planned_hlo_ops=expected_hlo_ops,
@@ -365,6 +393,8 @@ def audit_exchange_plan(arch: str = "transformer-big", n_workers: int = 8,
         counts_match=(hlo_ops == expected_hlo_ops
                       and schedule_info["stage_sum_matches_fused"]),
         planned_wire_bytes=planned_wire,
+        planned_hop_wire_bytes=list(plan.hop_wire_bytes(workers)),
+        codec_state_bytes=plan.state_bytes(),
         hlo_wire_bytes=hlo_wire,
         wire_ratio=(planned_wire / hlo_wire if hlo_wire else None),
         schedule=schedule_info,
@@ -438,7 +468,9 @@ def audit_exchange_gspmd(arch: str = "transformer-big", n_workers: int = 8,
     coll_bytes = {k: v for k, v in hlo_lib.analyze_collectives(hlo).items()
                   if k != "__bytes__"}
     p = n_workers
-    hlo_wire = plan.config.backend_obj.hlo_wire_estimate(coll_bytes, (p,))
+    hlo_wire = plan.config.backend_obj.hlo_wire_estimate(
+        coll_bytes, (p,), codec=plan.config.codec_obj,
+        ag_factor=plan.hlo_allgather_factor(p))
     planned_wire = plan.wire_bytes(p)
     hlo_ops = sum(counts.values())
     return dict(
@@ -536,12 +568,19 @@ def main(argv=None) -> int:
                          "must match the plan exactly; gspmd: lower the "
                          "non-shard_map training path and report the "
                          "compiler-chosen collectives next to the plan")
+    from repro.core import available_backends, available_codecs
     ap.add_argument("--codec", default="identity",
-                    help="WireCodec registry name (identity, bf16, f16, "
-                         "int8, ...)")
+                    help="WireCodec registry name (registered: "
+                         f"{', '.join(available_codecs())}; append "
+                         "'+ef' for error feedback)")
     ap.add_argument("--backend", default="jax",
-                    help="CollectiveBackend registry name (jax, "
-                         "hierarchical, ringsim, ...)")
+                    help="CollectiveBackend registry name (registered: "
+                         f"{', '.join(available_backends())})")
+    ap.add_argument("--error-feedback", action="store_true",
+                    help="with --audit-exchange (shard_map mode): lower "
+                         "the stateful error-feedback path (ExchangeState "
+                         "threaded through the jitted exchange) and "
+                         "verify it adds zero collectives / wire bytes")
     ap.add_argument("--overlap", action="store_true",
                     help="with --audit-exchange (shard_map mode): lower "
                          "the staged BucketSchedule path and verify its "
@@ -588,7 +627,8 @@ def main(argv=None) -> int:
                 reduce_scatter=args.reduce_scatter,
                 wire_dtype=args.wire_dtype,
                 codec=args.codec, backend=args.backend,
-                overlap=args.overlap)
+                overlap=args.overlap,
+                error_feedback=args.error_feedback)
         print(json.dumps(result, indent=2, default=str))
         if args.out:
             with open(args.out, "w") as f:

@@ -32,7 +32,8 @@ from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.configs import get_config
-from repro.core import DistributedOptimizer, ExchangeConfig
+from repro.core import (DistributedOptimizer, ExchangeConfig,
+                        available_backends, available_codecs)
 from repro.data import make_pipeline
 from repro.models import build_model
 from repro.optim import adamw, noam_schedule
@@ -61,24 +62,36 @@ def build_optimizer(args, cfg) -> DistributedOptimizer:
             codec=args.codec,
             backend=args.backend,
             overlap=args.overlap,
+            error_feedback=args.error_feedback,
         ),
         axis_name=axis,
     )
 
 
+def abstract_worker_grads(args, model, params, pipe,
+                          sparse_embedding: bool):
+    """One per-worker gradient-contribution tree, traced abstractly
+    (eval_shape, no compute) — the structure the ExchangePlan and its
+    ExchangeState are keyed on."""
+    from repro.training.gradients import abstract_grad_contributions
+    b0 = {k: jnp.asarray(v)[:args.batch_per_worker]
+          for k, v in pipe.batch_at(0).items()}
+    return abstract_grad_contributions(model, params, b0,
+                                       sparse_embedding=sparse_embedding)
+
+
 def print_exchange_schedule(args, model, params, opt, pipe,
-                            sparse_embedding: bool, n_dev: int) -> None:
-    """Trace one per-worker gradient tree abstractly (eval_shape, no
-    compute) and print the plan's BucketSchedule — what the step will
-    actually run, stage by stage."""
-    from repro.training.gradients import grad_contributions
+                            sparse_embedding: bool, n_dev: int):
+    """Print the plan's BucketSchedule — what the step will actually
+    run, stage by stage, including codec-state (residual) memory and
+    the per-hop wire split on hierarchical runs.  Returns the abstract
+    gradient tree (one ``jax.eval_shape`` trace of the full model —
+    callers reuse it for ``init_exchange_state``), or ``None`` if the
+    trace failed."""
+    g = None
     try:
-        b0 = {k: jnp.asarray(v)[:args.batch_per_worker]
-              for k, v in pipe.batch_at(0).items()}
-        g = jax.eval_shape(
-            lambda p, b: grad_contributions(
-                model, p, b, sparse_embedding=sparse_embedding)[0],
-            params, b0)
+        g = abstract_worker_grads(args, model, params, pipe,
+                                  sparse_embedding)
         if args.dist != "horovod":
             workers = 1
         elif args.backend == "hierarchical":
@@ -88,6 +101,7 @@ def print_exchange_schedule(args, model, params, opt, pipe,
         print(opt.exchange_stats(g, n_workers=workers).describe())
     except Exception as e:                       # informational only
         print(f"(exchange schedule unavailable: {e})")
+    return g
 
 
 def main(argv=None) -> int:
@@ -109,13 +123,24 @@ def main(argv=None) -> int:
                     choices=[None, "bf16", "bfloat16", "f16", "float16"],
                     help="deprecated spelling of --codec: downcast "
                          "fusion buffers to this dtype on the wire")
+    # choices/help enumerate the LIVE registries so the text can never
+    # drift from what is actually registered (e.g. fp8 availability
+    # depends on the installed jax exposing native float8 dtypes)
     ap.add_argument("--codec", default="identity",
                     help="WireCodec registry name for the gradient wire "
-                         "(identity, bf16, f16, f8e4m3, f8e5m2, int8, "
-                         "...)")
+                         f"(registered: {', '.join(available_codecs())}; "
+                         "append '+ef' to any name — or pass "
+                         "--error-feedback — for quantisation-residual "
+                         "error feedback)")
     ap.add_argument("--backend", default="jax",
-                    help="CollectiveBackend registry name (jax, "
-                         "hierarchical, ringsim, ...)")
+                    help="CollectiveBackend registry name (registered: "
+                         f"{', '.join(available_backends())})")
+    ap.add_argument("--error-feedback", action="store_true",
+                    help="wrap the codec in ErrorFeedbackCodec: keep a "
+                         "per-bucket f32 residual of the wire's "
+                         "quantisation error and fold it into the next "
+                         "step's encode (threads an ExchangeState "
+                         "through the train state and checkpoints)")
     ap.add_argument("--overlap", action="store_true",
                     help="staged BucketSchedule: launch per-bucket "
                          "collectives in reverse-layer readiness order, "
@@ -146,6 +171,7 @@ def main(argv=None) -> int:
     step = make_train_step(model, opt, sparse_embedding=sparse_embedding)
 
     n_dev = len(jax.devices())
+    stateful = step.stateful_exchange
     if args.dist == "horovod":
         axes = dist_axes(args)
         if len(axes) == 2:
@@ -157,10 +183,19 @@ def main(argv=None) -> int:
             shape = (n_dev,)
         mesh = Mesh(np.array(jax.devices()).reshape(shape), axes)
         pspec_batch = P(axes)
-        step = shard_map(step, mesh=mesh,
-                         in_specs=(P(), P(), pspec_batch),
-                         out_specs=(P(), P(), P()),
-                         check_rep=False)
+        if stateful:
+            # ExchangeState leaves are flat per-worker residuals stacked
+            # on dim 0: shard them over the data axes so each worker
+            # reads and writes only its own slice
+            step = shard_map(step, mesh=mesh,
+                             in_specs=(P(), P(), P(axes), pspec_batch),
+                             out_specs=(P(), P(), P(axes), P()),
+                             check_rep=False)
+        else:
+            step = shard_map(step, mesh=mesh,
+                             in_specs=(P(), P(), pspec_batch),
+                             out_specs=(P(), P(), P()),
+                             check_rep=False)
         batch_per_host = args.batch_per_worker * n_dev
         print(f"horovod mode: {n_dev} workers ({'x'.join(map(str, shape))}"
               f" {'/'.join(axes)}), global batch "
@@ -171,14 +206,22 @@ def main(argv=None) -> int:
     pipe = make_pipeline(cfg, batch_per_host=batch_per_host,
                          seq_len=args.seq_len, seed=args.seed,
                          task=args.task)
-    if args.overlap:
-        print_exchange_schedule(args, model, params, opt, pipe,
-                                sparse_embedding, n_dev)
+    g = None
+    if args.overlap or stateful or args.backend == "hierarchical":
+        g = print_exchange_schedule(args, model, params, opt, pipe,
+                                    sparse_embedding, n_dev)
+    ex_state = None
+    if stateful:
+        if g is None:
+            g = abstract_worker_grads(args, model, params, pipe,
+                                      sparse_embedding)
+        ex_state = opt.init_exchange_state(
+            g, n_workers=n_dev if args.dist == "horovod" else 1)
     trainer = Trainer(model, step, pipe, TrainerConfig(
         total_steps=args.steps, log_every=args.log_every,
         checkpoint_every=args.checkpoint_every,
         checkpoint_dir=args.checkpoint_dir, resume=args.resume))
-    result = trainer.run(params, opt_state)
+    result = trainer.run(params, opt_state, exchange_state=ex_state)
     final = result["history"][-1] if result["history"] else {}
     print(f"done: {final}")
     return 0

@@ -65,3 +65,17 @@ def grad_contributions(model, params, batch: Dict[str, jax.Array],
         g_params = dict(g_params)
         g_params["embedding"] = [slices]
     return g_params, loss, metrics
+
+
+def abstract_grad_contributions(model, params, batch,
+                                sparse_embedding: bool = False,
+                                **loss_kw):
+    """One worker's gradient-contribution tree, traced abstractly
+    (``jax.eval_shape``, no FLOPs) — the structure ``compile_plan`` and
+    ``DistributedOptimizer.init_exchange_state`` are keyed on.  The
+    single place the launcher, benchmarks and CI smoke scripts get it
+    from, so the state-init convention cannot drift between them."""
+    return jax.eval_shape(
+        lambda p, b: grad_contributions(
+            model, p, b, sparse_embedding=sparse_embedding, **loss_kw)[0],
+        params, batch)

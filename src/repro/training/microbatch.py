@@ -202,14 +202,25 @@ def make_scaled_train_step(model, opt, scaler: LossScaler,
     final microbatch's gradient is handed to the exchange UNSUMMED
     (``defer_final``): the staged BucketSchedule folds it in per
     bucket, so each stage's remaining accumulation compute runs after
-    the previous stage's collective has already launched."""
+    the previous stage's collective has already launched.
+
+    Stateful codecs widen the signature to ``step(params, opt_state,
+    scaler_state, exchange_state, batch)`` (returning the new
+    ExchangeState second-from-last, before metrics); on
+    overflow-skipped steps the
+    residuals roll back with params/opt_state — a non-finite encode
+    would bank inf-inf = NaN residuals and poison every later wire.
+    Like the gradients themselves, residuals live in scaled units, so
+    whenever the scaler moves (growth or backoff) they are multiplied
+    by ``new_scale / old_scale`` to match the next step's grads."""
     from repro.optim.base import apply_updates
 
     cfg = getattr(opt, "exchange_config", None)
     defer_final = (cfg is not None and cfg.overlap
                    and n_microbatches > 1)
+    stateful = cfg is not None and cfg.codec_obj.stateful
 
-    def step(params, opt_state, scaler_state, batch):
+    def _core(params, opt_state, scaler_state, batch, ex_state):
         def loss_fn(p, b):
             if n_microbatches > 1:
                 stacked = split_microbatches(b, n_microbatches)
@@ -223,6 +234,7 @@ def make_scaled_train_step(model, opt, scaler: LossScaler,
             return g, loss, metrics
 
         # scale by differentiating the SCALED loss: equivalent to grad*scale
+        old_scale = scaler_state.scale
         grads, loss, metrics = loss_fn(params, batch)
         grads = jax.tree_util.tree_map(
             lambda g: g * scaler_state.scale if not isinstance(g, list)
@@ -231,7 +243,11 @@ def make_scaled_train_step(model, opt, scaler: LossScaler,
                                      c.values * scaler_state.scale,
                                      c.dense_shape) for c in g],
             grads, is_leaf=lambda x: isinstance(x, list))
-        dense = opt.exchange(grads)
+        if ex_state is None:
+            dense = opt.exchange(grads)
+        else:
+            prev_ex_state = ex_state
+            dense, ex_state = opt.exchange(grads, state=ex_state)
         dense, finite, scaler_state = scaler.unscale_and_check(
             dense, scaler_state)
         updates, new_opt_state = opt.base.update(dense, opt_state, params)
@@ -242,9 +258,34 @@ def make_scaled_train_step(model, opt, scaler: LossScaler,
         opt_state = jax.tree_util.tree_map(
             lambda new, old: jnp.where(finite, new, old),
             new_opt_state, opt_state)
+        if ex_state is not None:
+            # an overflowed encode banks inf-inf = NaN residuals that
+            # would poison every later step's wire
+            ex_state = jax.tree_util.tree_map(
+                lambda new, old: jnp.where(finite, new, old),
+                ex_state, prev_ex_state)
+            # residuals live in loss-scaled units: when the scaler moves
+            # (growth or backoff) convert them to the units the next
+            # step's grads will carry, or EF compensates at the wrong
+            # magnitude across every scale transition
+            rescale = jnp.where(scaler_state.scale == old_scale,
+                                jnp.float32(1.0),
+                                scaler_state.scale / old_scale)
+            ex_state = jax.tree_util.tree_map(
+                lambda r: r * rescale, ex_state)
         metrics = dict(metrics, loss=loss,
                        loss_scale=scaler_state.scale,
                        overflow=~finite)
-        return params, opt_state, scaler_state, metrics
+        return params, opt_state, scaler_state, ex_state, metrics
 
+    if stateful:
+        def step(params, opt_state, scaler_state, ex_state, batch):
+            return _core(params, opt_state, scaler_state, batch, ex_state)
+    else:
+        def step(params, opt_state, scaler_state, batch):
+            params, opt_state, scaler_state, _, metrics = _core(
+                params, opt_state, scaler_state, batch, None)
+            return params, opt_state, scaler_state, metrics
+
+    step.stateful_exchange = stateful
     return step

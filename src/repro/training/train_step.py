@@ -11,6 +11,14 @@ can launch per-bucket collectives in reverse-layer readiness order,
 interleaved with the remaining accumulation/pack compute, before any
 bucket unpacks.  ``metrics["exchange_stages"]`` reports how many stages
 the active schedule ran.
+
+STATEFUL codecs (``opt.stateful``, e.g. ``codec="int8+ef"``) carry
+their ExchangeState in the train-state pytree: the step signature
+widens to ``step(params, opt_state, exchange_state, batch) -> (params,
+opt_state, exchange_state, metrics)`` so the error-feedback residuals
+flow step to step, jit to jit, and into checkpoints.  The factory tags
+the returned step with ``step.stateful_exchange`` so Trainer and the
+launchers pick the right calling convention.
 """
 from __future__ import annotations
 
@@ -28,25 +36,48 @@ def make_train_step(model, opt: DistributedOptimizer,
                     sparse_embedding: bool = False,
                     **loss_kw) -> Callable:
     """Returns step(params, opt_state, batch) -> (params, opt_state,
-    metrics)."""
+    metrics) — or, when the optimizer's codec is stateful,
+    step(params, opt_state, exchange_state, batch) -> (params,
+    opt_state, exchange_state, metrics)."""
     cfg = getattr(opt, "exchange_config", None)
     overlap = cfg is not None and cfg.overlap
+    stateful = cfg is not None and cfg.codec_obj.stateful
 
-    def step(params, opt_state, batch):
+    def _core(params, opt_state, batch, ex_state):
         grads, loss, metrics = grad_contributions(
             model, params, batch, sparse_embedding=sparse_embedding,
             **loss_kw)
-        if cfg is None:                      # plain Optimizer fallback
-            updates, opt_state = opt.update(grads, opt_state, params)
-            params = apply_updates(params, updates)
-            return params, opt_state, dict(metrics, loss=loss)
-        dense = (opt.exchange_scheduled(grads) if overlap
-                 else opt.exchange(grads))
+        do_exchange = (opt.exchange_scheduled if overlap
+                       else opt.exchange)
+        if ex_state is None:
+            dense = do_exchange(grads)
+        else:
+            dense, ex_state = do_exchange(grads, state=ex_state)
         updates, opt_state = opt.base.update(dense, opt_state, params)
         params = apply_updates(params, updates)
         n_stages = opt.plan(grads).schedule.n_stages
         metrics = dict(metrics, loss=loss,
                        exchange_stages=jnp.int32(n_stages))
-        return params, opt_state, metrics
+        return params, opt_state, ex_state, metrics
 
+    if cfg is None:
+        def step(params, opt_state, batch):   # plain Optimizer fallback
+            grads, loss, metrics = grad_contributions(
+                model, params, batch, sparse_embedding=sparse_embedding,
+                **loss_kw)
+            updates, opt_state = opt.update(grads, opt_state, params)
+            params = apply_updates(params, updates)
+            return params, opt_state, dict(metrics, loss=loss)
+    elif stateful:
+        def step(params, opt_state, ex_state, batch):
+            params, opt_state, ex_state, metrics = _core(
+                params, opt_state, batch, ex_state)
+            return params, opt_state, ex_state, metrics
+    else:
+        def step(params, opt_state, batch):
+            params, opt_state, _, metrics = _core(params, opt_state,
+                                                  batch, None)
+            return params, opt_state, metrics
+
+    step.stateful_exchange = stateful
     return step

@@ -27,15 +27,28 @@ class Trainer:
     pipeline: Any                       # iterable of host batches
     config: TrainerConfig
 
-    def run(self, params, opt_state, log: Callable[[str], None] = print
-            ) -> Dict[str, Any]:
+    def run(self, params, opt_state, log: Callable[[str], None] = print,
+            exchange_state: Any = None) -> Dict[str, Any]:
+        """Run the loop.  ``exchange_state`` (an ``ExchangeState`` from
+        ``opt.init_exchange_state``) switches the step to the stateful
+        calling convention — the codec residuals then ride the train
+        state: threaded through every jit_step, saved in every
+        checkpoint, and restored on resume so a mid-run restart picks
+        up with identical residuals."""
         cfg = self.config
+        stateful = exchange_state is not None
         start_step = 0
         if cfg.resume and cfg.checkpoint_dir:
             s = latest_step(cfg.checkpoint_dir)
             if s is not None:
-                (params, opt_state), start_step = restore_checkpoint(
-                    cfg.checkpoint_dir, (params, opt_state), step=s)
+                if stateful:
+                    (params, opt_state, exchange_state), start_step = \
+                        restore_checkpoint(
+                            cfg.checkpoint_dir,
+                            (params, opt_state, exchange_state), step=s)
+                else:
+                    (params, opt_state), start_step = restore_checkpoint(
+                        cfg.checkpoint_dir, (params, opt_state), step=s)
                 log(f"resumed from step {start_step}")
 
         jit_step = jax.jit(self.step_fn)
@@ -46,7 +59,12 @@ class Trainer:
         for step in range(start_step, cfg.total_steps):
             batch = {k: jax.numpy.asarray(v)
                      for k, v in self.pipeline.batch_at(step).items()}
-            params, opt_state, metrics = jit_step(params, opt_state, batch)
+            if stateful:
+                params, opt_state, exchange_state, metrics = jit_step(
+                    params, opt_state, exchange_state, batch)
+            else:
+                params, opt_state, metrics = jit_step(params, opt_state,
+                                                      batch)
             tokens_seen += int(np.prod(batch["tokens"].shape))
             window_steps += 1
             if (step + 1) % cfg.log_every == 0 or step == cfg.total_steps - 1:
@@ -68,7 +86,8 @@ class Trainer:
                     f"step_ms={m['step_ms']:.1f}")
             if (cfg.checkpoint_every and cfg.checkpoint_dir
                     and (step + 1) % cfg.checkpoint_every == 0):
-                save_checkpoint(cfg.checkpoint_dir, step + 1,
-                                (params, opt_state))
+                tree = ((params, opt_state, exchange_state) if stateful
+                        else (params, opt_state))
+                save_checkpoint(cfg.checkpoint_dir, step + 1, tree)
         return {"params": params, "opt_state": opt_state,
-                "history": history}
+                "exchange_state": exchange_state, "history": history}
