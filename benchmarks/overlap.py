@@ -1,22 +1,31 @@
 """Overlap scheduling: exposed vs hidden communication time.
 
-The staged BucketSchedule (``ExchangeConfig(overlap=True)``) launches
-every bucket's collective — in reverse-layer readiness order — before
-any bucket unpacks, so collectives can hide behind the remaining
-accumulation/pack compute.  This benchmark measures, on 8 emulated CPU
-workers with the REDUCED transformer-big gradient tree (the paper's
-arch, the acceptance config):
+Three overlap modes of the SAME ExchangePlan, measured end-to-end
+(loss + backward + exchange) on 8 emulated CPU workers with the REDUCED
+transformer-big config (the paper's arch, the acceptance config):
 
-  * ``compute_only``   — plan accumulation + densify, no collectives;
-  * ``fused``          — the serial pack -> collective -> unpack loop;
-  * ``overlap``        — the staged launch-all-then-unpack schedule;
+  * ``fused``          — backward, then the serial pack -> collective ->
+                         unpack loop (``overlap=False``);
+  * ``staged``         — backward, then the staged launch-all-then-
+                         unpack BucketSchedule (``overlap="staged"``,
+                         PR 3's baseline);
+  * ``intra_backward`` — wait-free backprop (``overlap="backward"``):
+                         block-aligned buckets whose collectives launch
+                         from inside the backward pass via custom_vjp
+                         taps, the moment each block's cotangents are
+                         emitted.
 
-and reports ``exposed_comm = exchange - compute_only`` for each
-schedule.  On shared-memory CPU "interconnect" the hidden fraction is
-modest; what must hold is that overlap never ADDS collectives (the
-schedule is a pure reordering — asserted by the dry-run audit) and the
-exposed-communication accounting is reported machine-readably for the
-perf trajectory.
+``compute_only`` is the collective-free floor (backward + accumulate +
+densify, no exchange); ``exposed_comm = mode - compute_only``.  The
+matrix is parameterized over codec/backend so quantised (int8+ef) and
+hierarchical rows are comparable across modes.  The legacy exchange-only
+rows (identity codec, pre-computed gradients) are kept so the perf
+trajectory from earlier runs stays continuous.
+
+On shared-memory CPU "interconnect" the hidden fraction is modest; what
+must hold is that no mode ADDS collectives (pure reordering — asserted
+by the dry-run audit) and that the wait-free mode's exposed
+communication stays below the staged baseline.
 """
 from __future__ import annotations
 
@@ -28,7 +37,7 @@ import textwrap
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 _DIST_CODE = textwrap.dedent("""
-    import functools, time
+    import time
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import Mesh, PartitionSpec as P
     from jax.experimental.shard_map import shard_map
@@ -37,17 +46,16 @@ _DIST_CODE = textwrap.dedent("""
     from repro.data import make_pipeline
     from repro.models import build_model
     from repro.optim import adamw
-    from repro.training.gradients import grad_contributions
+    from repro.training.gradients import (abstract_grad_contributions,
+                                          grad_contributions,
+                                          wait_free_grad_exchange)
 
     cfg = get_config('transformer-big').reduced()
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    pipe = make_pipeline(cfg, batch_per_host=2, seq_len=32)
+    pipe = make_pipeline(cfg, batch_per_host=8, seq_len=32)
     batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(0).items()}
-    grads, _, _ = grad_contributions(model, params, batch,
-                                     sparse_embedding=True)
-
-    mesh = Mesh(np.array(jax.devices()), ('data',))
+    devs = np.array(jax.devices())
 
     def timed(fn, *args, iters=5):
         jax.block_until_ready(fn(*args))          # compile + warm
@@ -59,32 +67,120 @@ _DIST_CODE = textwrap.dedent("""
             ts.append(time.perf_counter() - t0)
         return sorted(ts)[len(ts) // 2] * 1e6
 
-    results = {}
-    n_stages = None
-    for name, overlap in (('fused', False), ('overlap', True)):
-        opt = DistributedOptimizer(
+    def timed_group(named, iters=9):
+        # interleave the modes round-robin so system drift between
+        # sequential measurements cannot bias one mode: compile+warm
+        # everything first, then one timed call per mode per round,
+        # per-mode medians
+        for fn, args in named.values():
+            jax.block_until_ready(fn(*args))
+            jax.block_until_ready(fn(*args))
+        samples = {k: [] for k in named}
+        for _ in range(iters):
+            for k, (fn, args) in named.items():
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn(*args))
+                samples[k].append(time.perf_counter() - t0)
+        return {k: sorted(v)[len(v) // 2] * 1e6
+                for k, v in samples.items()}
+
+    def make_opt(codec, backend, overlap, axis):
+        return DistributedOptimizer(
             adamw(1e-3),
-            exchange=ExchangeConfig(sparse_as_dense=True,
-                                    overlap=overlap),
-            axis_name=('data',))
-        plan = opt.plan(grads)
-        n_stages = plan.schedule.n_stages
+            exchange=ExchangeConfig(sparse_as_dense=True, codec=codec,
+                                    backend=backend, overlap=overlap),
+            axis_name=axis)
+
+    CONFIGS = [('identity', 'identity', 'jax'),
+               ('int8ef', 'int8+ef', 'jax'),
+               ('int8hier', 'int8', 'hierarchical')]
+
+    for tag, codec, backend in CONFIGS:
+        if backend == 'hierarchical':
+            mesh = Mesh(devs.reshape(2, 4), ('pod', 'data'))
+            axis = ('pod', 'data')
+            bshard = P(('pod', 'data'))
+        else:
+            mesh = Mesh(devs, ('data',))
+            axis = ('data',)
+            bshard = P('data')
+
+        g_abs = abstract_grad_contributions(
+            model, params,
+            jax.tree_util.tree_map(lambda x: x[:1], batch),
+            sparse_embedding=True)
+        opt_probe = make_opt(codec, backend, False, axis)
+        stateful = opt_probe.stateful
+        state0 = (opt_probe.init_exchange_state(g_abs, n_workers=8)
+                  if stateful else None)
+
+        def lower(fn, with_state):
+            if with_state:
+                return jax.jit(shard_map(
+                    fn, mesh=mesh, in_specs=(P(), bshard, P(axis)),
+                    out_specs=(P(), P(axis)), check_rep=False))
+            return jax.jit(shard_map(
+                fn, mesh=mesh, in_specs=(P(), bshard),
+                out_specs=P(), check_rep=False))
+
+        # collective-free floor: backward + accumulate + densify
+        plan0 = opt_probe.plan(g_abs)
+        def floor_fn(p_, b_):
+            g = grad_contributions(model, p_, b_,
+                                   sparse_embedding=True)[0]
+            return plan0.accumulate_tree(g)
+        group = {'compute': (lower(floor_fn, False), (params, batch))}
+
+        def make_step(overlap):
+            opt = make_opt(codec, backend, overlap, axis)
+            if overlap == 'backward':
+                def step(p_, b_, s=None):
+                    d, ns, _, _ = wait_free_grad_exchange(
+                        model, opt, p_, b_, state=s,
+                        sparse_embedding=True)
+                    return (d, ns) if s is not None else d
+            else:
+                def step(p_, b_, s=None):
+                    g = grad_contributions(model, p_, b_,
+                                           sparse_embedding=True)[0]
+                    return opt.exchange(g, state=s) if s is not None \\
+                        else opt.exchange(g)
+            return step
+
+        for mode, overlap in (('fused', False), ('staged', 'staged'),
+                              ('backward', 'backward')):
+            args = (params, batch, state0) if stateful \\
+                else (params, batch)
+            group[mode] = (lower(make_step(overlap), stateful), args)
+
+        results = timed_group(group)
+        print('TAG', tag, 'COMPUTE', results['compute'],
+              'FUSED', results['fused'], 'STAGED', results['staged'],
+              'BACKWARD', results['backward'])
+
+    # legacy exchange-only rows (identity codec, pre-computed grads):
+    # continuity with the PR 3 perf trajectory
+    mesh = Mesh(devs, ('data',))
+    grads, _, _ = grad_contributions(model, params,
+                                     jax.tree_util.tree_map(
+                                         lambda x: x[:2], batch),
+                                     sparse_embedding=True)
+    legacy = {}
+    for name, overlap in (('fused', False), ('overlap', True)):
+        opt = make_opt('identity', 'jax', overlap, ('data',))
         sm = jax.jit(shard_map(opt.exchange, mesh=mesh, in_specs=(P(),),
                                out_specs=P(), check_rep=False))
-        results[name] = timed(sm, grads)
+        legacy[name] = timed(sm, grads)
         if name == 'fused':
-            # accumulation + densify only: the same plan with every
-            # collective degraded to a no-op (local path) — the compute
-            # floor both schedules share
+            plan = opt.plan(grads)
             acc = jax.jit(shard_map(plan.accumulate_tree, mesh=mesh,
                                     in_specs=(P(),), out_specs=P(),
                                     check_rep=False))
-            results['compute_only'] = timed(acc, grads)
-
-    print('N_STAGES', n_stages)
-    print('COMPUTE_US', results['compute_only'])
-    print('FUSED_US', results['fused'])
-    print('OVERLAP_US', results['overlap'])
+            legacy['compute_only'] = timed(acc, grads)
+            print('N_STAGES', plan.schedule.n_stages)
+    print('COMPUTE_US', legacy['compute_only'])
+    print('FUSED_US', legacy['fused'])
+    print('OVERLAP_US', legacy['overlap'])
 """)
 
 
@@ -93,15 +189,41 @@ def run(emit):
                XLA_FLAGS="--xla_force_host_platform_device_count=8",
                PYTHONPATH=os.path.join(REPO, "src"))
     res = subprocess.run([sys.executable, "-c", _DIST_CODE], env=env,
-                         capture_output=True, text=True, timeout=560)
+                         capture_output=True, text=True, timeout=1500)
     if res.returncode != 0:
         emit("overlap_error", 0.0, res.stderr[-120:].replace(
             ",", ";").replace("\n", "|"))
         return
 
+    # per-config end-to-end rows: compute floor, three overlap modes,
+    # and the exposed-comm deltas the acceptance contract keys on
+    for line in res.stdout.splitlines():
+        if not line.startswith("TAG "):
+            continue
+        f = line.split()
+        tag = f[1]
+        comp, fused, staged, bwd = (float(f[3]), float(f[5]),
+                                    float(f[7]), float(f[9]))
+        emit(f"overlap_step_compute_{tag}_P8", comp,
+             "grad+accumulate_no_collectives")
+        emit(f"overlap_step_fused_{tag}_P8", fused, "end_to_end")
+        emit(f"overlap_step_staged_{tag}_P8", staged, "end_to_end")
+        emit(f"overlap_step_backward_{tag}_P8", bwd,
+             "end_to_end_wait_free")
+        ex_f = max(fused - comp, 0.0)
+        ex_s = max(staged - comp, 0.0)
+        ex_b = max(bwd - comp, 0.0)
+        emit(f"overlap_exposed_comm_fused_{tag}_P8", ex_f,
+             "step_minus_compute")
+        emit(f"overlap_exposed_comm_staged_{tag}_P8", ex_s,
+             "step_minus_compute")
+        emit(f"overlap_exposed_comm_backward_{tag}_P8", ex_b,
+             f"step_minus_compute_below_staged={ex_b < ex_s}")
+
     def grab(tag):
         return float(res.stdout.split(tag)[1].split()[0])
 
+    # legacy exchange-only rows (identity): perf-trajectory continuity
     comp, fused, over = (grab("COMPUTE_US"), grab("FUSED_US"),
                          grab("OVERLAP_US"))
     n_stages = int(grab("N_STAGES"))

@@ -62,7 +62,7 @@ class ExchangeStats:
     n_collectives: int
     strategy: str
     n_stages: int = 1            # BucketSchedule stages (1 bucket each)
-    overlap: bool = False        # staged launch-all-then-unpack schedule?
+    overlap: Union[bool, str] = False    # False | "staged" | "backward"
     schedule_table: str = ""     # plan.describe_schedule(n_workers)
     state_bytes: int = 0         # per-worker codec-state memory (residuals)
     state_bytes_per_bucket: tuple = ()   # same, stage by stage
@@ -72,12 +72,15 @@ class ExchangeStats:
         """One-look summary of what the exchange will actually run:
         strategy, totals, codec-state memory, and the per-stage
         BucketSchedule (with per-hop wire on hierarchical runs)."""
+        ov = self.overlap
+        mode = ("off" if not ov
+                else "on" if ov in (True, "staged") else str(ov))
         head = (f"exchange: strategy={self.strategy} "
                 f"collectives={self.n_collectives} "
                 f"wire_bytes/worker={self.wire_bytes} "
                 f"accumulated_bytes={self.accumulated_bytes} "
                 f"stages={self.n_stages} "
-                f"overlap={'on' if self.overlap else 'off'}")
+                f"overlap={mode}")
         if self.state_bytes:
             per = ",".join(str(b) for b in self.state_bytes_per_bucket)
             head += (f"\ncodec state: {self.state_bytes} B/worker "
@@ -218,7 +221,8 @@ class DistributedOptimizer:
         if cfg.backend != "jax":
             strategy += f"+backend:{cfg.backend}"
         if cfg.overlap:
-            strategy += "+overlap"
+            strategy += ("+overlap" if cfg.overlap == "staged"
+                         else f"+overlap:{cfg.overlap}")
         return ExchangeStats(
             accumulated_bytes=plan.buffer_bytes(n_workers),
             wire_bytes=plan.wire_bytes(n_workers),

@@ -87,10 +87,19 @@ class ExchangeConfig:
     backend: str = "jax"                 # CollectiveBackend registry name
     hierarchy_levels: int = 2            # mesh axes a hierarchical plan spans
     use_kernel: bool = False             # Pallas densify/quantize kernels
-    overlap: bool = False                # staged schedule: launch every
-    #                                      bucket collective before any
-    #                                      unpack, interleaved with the
-    #                                      remaining accumulation compute
+    overlap: Union[bool, str] = False    # False | "staged" | "backward".
+    #                                      "staged" (legacy True): launch
+    #                                      every bucket collective before
+    #                                      any unpack, interleaved with
+    #                                      the remaining accumulation
+    #                                      compute.  "backward" (wait-free
+    #                                      backprop): buckets are snapped
+    #                                      to model-block boundaries and
+    #                                      each block's collectives launch
+    #                                      from INSIDE the backward pass
+    #                                      via per-block custom_vjp hooks
+    #                                      (training.gradients.
+    #                                      wait_free_grad_exchange)
     error_feedback: bool = False         # wrap codec in ErrorFeedbackCodec
     #                                      (normalised onto codec="<x>+ef")
     # -- deprecated spellings, folded into codec/backend ---------------------
@@ -101,6 +110,18 @@ class ExchangeConfig:
         if self.algorithm not in ("tf_algorithm1", "proposed_algorithm2"):
             raise ValueError(
                 f"unknown accumulation algorithm: {self.algorithm}")
+        # normalise overlap onto False | "staged" | "backward" so legacy
+        # bool configs compare, hash, and cache identically to the
+        # string spellings (and every `if cfg.overlap:` keeps working)
+        ov = self.overlap
+        if ov in (False, None, "none", "off"):
+            ov = False
+        elif ov in (True, "staged", "on"):
+            ov = "staged"
+        elif ov != "backward":
+            raise ValueError(f"unknown overlap mode: {self.overlap!r} "
+                             f"(expected False, 'staged' or 'backward')")
+        object.__setattr__(self, "overlap", ov)
         if self.wire_dtype is not None:
             mapped = codecs.codec_name_for_wire_dtype(self.wire_dtype)
             if self.codec not in ("identity", mapped):
@@ -151,6 +172,11 @@ class ExchangeConfig:
     @property
     def is_hierarchical(self) -> bool:
         return self.backend == "hierarchical"
+
+    @property
+    def overlap_backward(self) -> bool:
+        """Wait-free backprop: collectives launch mid-backward."""
+        return self.overlap == "backward"
 
     @property
     def dense_collective(self) -> str:
@@ -333,6 +359,9 @@ class BucketStage:
     bucket_id: int               # index into plan.dense_buckets, or the
     #                              gathered leaf id itself
     leaf_ids: Tuple[int, ...]    # readiness key: leaves this stage needs
+    trigger: str = ""            # top-level model block whose backward
+    #                              emission makes this stage launchable
+    #                              (the block of the ready_key leaf)
 
     @property
     def ready_key(self) -> int:
@@ -367,6 +396,9 @@ class ExchangePlan:
     gather_leaf_ids: Tuple[int, ...]
     config: ExchangeConfig
     schedule: BucketSchedule
+    leaf_blocks: Tuple[str, ...] = ()    # per-leaf top-level block label
+    #                                      (from the grad tree's key
+    #                                      paths; "" when unlabelled)
 
     # -- static accounting ---------------------------------------------------
     @property
@@ -571,9 +603,15 @@ class ExchangePlan:
         keys, per-stage collectives (and wire bytes when ``n_workers``
         is given) — what a dry-run / trainer will actually run."""
         sch = self.schedule
-        mode = "overlap" if self.config.overlap else "fused"
-        lines = [f"schedule: {sch.n_stages} stages ({mode}), launch "
-                 f"order reverse-layer (descending readiness key)"]
+        ov = self.config.overlap
+        mode = ("wait-free backward" if ov == "backward"
+                else "overlap" if ov else "fused")
+        launch = ("each stage launches from inside the backward pass, "
+                  "the moment its trigger block's cotangents are emitted"
+                  if ov == "backward"
+                  else "launch order reverse-layer (descending readiness "
+                  "key)")
+        lines = [f"schedule: {sch.n_stages} stages ({mode}), {launch}"]
         state_per_stage = self.state_bytes_per_stage()
         for k, st in enumerate(sch.stages):
             wire = ""
@@ -581,9 +619,11 @@ class ExchangePlan:
                 wire = f", {self.stage_wire_bytes(st, n_workers)} wire B"
             state = (f", {state_per_stage[k]} state B"
                      if state_per_stage[k] else "")
+            trig = f", trigger={st.trigger}" if st.trigger else ""
             lines.append(
                 f"  stage {k}: {st.kind} bucket {st.bucket_id}, "
-                f"{len(st.leaf_ids)} leaves (ready@{st.ready_key}), "
+                f"{len(st.leaf_ids)} leaves (ready@{st.ready_key}"
+                f"{trig}), "
                 f"{self.stage_collectives(st)} collectives{wire}{state}")
         if n_workers is not None and self.config.is_hierarchical:
             hops = self.hop_wire_bytes(n_workers)
@@ -651,6 +691,35 @@ class ExchangePlan:
                 f"hierarchical plan spans {self.config.hierarchy_levels} "
                 f"mesh axes but got axis_name={axis_name!r}")
         return axes
+
+    def backward_block_stages(self, hooked_blocks=None
+                              ) -> Tuple[Dict[str, Tuple[int, ...]],
+                                         Tuple[int, ...]]:
+        """Split the schedule for wait-free (in-backward) launch.
+
+        Returns ``(block -> stage indices, tail stage indices)``.  A
+        stage is HOOKABLE — launchable from inside a block's
+        ``custom_vjp`` boundary — when it is dense and every leaf it
+        consumes lives in one top-level block (guaranteed by the
+        block-aligned bucketing of ``overlap='backward'``) that is in
+        ``hooked_blocks`` (``None`` = every labelled block).  Gather
+        stages and stages of unhooked blocks form the TAIL, executed
+        after ``jax.grad`` returns — sparse embedding contributions are
+        assembled outside autodiff, so they can never launch
+        mid-backward.  Stage indices stay in schedule order, so codec
+        state entries map 1:1 onto ``ExchangeState.bucket_states``."""
+        hooked: Dict[str, List[int]] = {}
+        tail: List[int] = []
+        for k, st in enumerate(self.schedule.stages):
+            blocks = ({self.leaf_blocks[i] for i in st.leaf_ids}
+                      if self.leaf_blocks else {""})
+            b = blocks.pop() if len(blocks) == 1 else None
+            if (st.kind == "dense" and b
+                    and (hooked_blocks is None or b in hooked_blocks)):
+                hooked.setdefault(b, []).append(k)
+            else:
+                tail.append(k)
+        return ({k: tuple(v) for k, v in hooked.items()}, tuple(tail))
 
     # -- staged execution primitives -----------------------------------------
     def _launch_gather(self, stage: BucketStage, leaves: List[Any],
@@ -1023,8 +1092,12 @@ _CACHE_STATS = {"hits": 0, "misses": 0}
 
 
 def _build_plan(treedef, contrib_specs: Tuple[Tuple[LeafSpec, ...], ...],
-                config: ExchangeConfig) -> ExchangePlan:
+                config: ExchangeConfig,
+                leaf_blocks: Optional[Tuple[str, ...]] = None
+                ) -> ExchangePlan:
     leaf_specs = tuple(classify(c, config) for c in contrib_specs)
+    if leaf_blocks is None:
+        leaf_blocks = ("",) * len(leaf_specs)
     dense_ids = tuple(i for i, s in enumerate(leaf_specs)
                       if isinstance(s, DenseSpec))
     gather_ids = tuple(i for i, s in enumerate(leaf_specs)
@@ -1033,18 +1106,24 @@ def _build_plan(treedef, contrib_specs: Tuple[Tuple[LeafSpec, ...], ...],
     # bucket dense leaves with the Horovod fusion planner, one group per
     # wire dtype (so packed buffers never promote and byte accounting is
     # exact); thresholds are measured in WIRE bytes so bf16 wires pack
-    # twice — and int8 wires four times — the elements per bucket
+    # twice — and int8 wires four times — the elements per bucket.
+    # Under overlap="backward" the partition is additionally snapped to
+    # model-block boundaries (one group per (block, wire dtype)): a
+    # bucket crossing blocks could not launch until BOTH blocks'
+    # cotangents were emitted, which defeats wait-free launch and would
+    # split codec state across custom_vjp boundaries.
     codec = config.codec_obj
-    groups: Dict[str, List[int]] = {}
+    groups: Dict[Tuple[str, str], List[int]] = {}
     for i in dense_ids:
         dt = codec.wire_dtype(leaf_specs[i].dtype)
-        groups.setdefault(dt, []).append(i)
+        block = leaf_blocks[i] if config.overlap_backward else ""
+        groups.setdefault((block, dt), []).append(i)
     threshold = (config.fusion_threshold
                  if config.fusion_threshold is not None else 0)
     dense_ids = tuple(i for ids in groups.values() for i in ids)
     buckets = []
     base = 0
-    for dt, ids in groups.items():
+    for (_, dt), ids in groups.items():
         structs = [jax.ShapeDtypeStruct(leaf_specs[i].shape, dt)
                    for i in ids]
         fplan = fusion.plan_fusion(structs, threshold_bytes=threshold)
@@ -1058,26 +1137,51 @@ def _build_plan(treedef, contrib_specs: Tuple[Tuple[LeafSpec, ...], ...],
     buckets = tuple(buckets)
 
     # compile the BucketSchedule: one stage per bucket, each carrying
-    # its readiness key (the leaf set it consumes).  Launch order is
-    # reverse-layer — backward emits leaves in reverse flatten order, so
-    # the stage with the LARGEST minimum leaf id is ready first and its
-    # collective can be in flight while earlier-layer stages are still
-    # accumulating.
+    # its readiness key (the leaf set it consumes) and its TRIGGER (the
+    # block whose backward emission completes that leaf set).  Launch
+    # order is reverse-layer — backward emits leaves in reverse flatten
+    # order, so the stage with the LARGEST minimum leaf id is ready
+    # first and its collective can be in flight while earlier-layer
+    # stages are still accumulating.
     stages = []
     for bi, b in enumerate(buckets):
+        ids = tuple(dense_ids[s.leaf_idx] for s in b.slots)
         stages.append(BucketStage(
-            kind="dense", bucket_id=bi,
-            leaf_ids=tuple(dense_ids[s.leaf_idx] for s in b.slots)))
+            kind="dense", bucket_id=bi, leaf_ids=ids,
+            trigger=leaf_blocks[min(ids)]))
     for gi in gather_ids:
         stages.append(BucketStage(kind="gather", bucket_id=gi,
-                                  leaf_ids=(gi,)))
+                                  leaf_ids=(gi,),
+                                  trigger=leaf_blocks[gi]))
     stages.sort(key=lambda s: -s.ready_key)
     schedule = BucketSchedule(stages=tuple(stages))
 
     return ExchangePlan(treedef=treedef, contrib_specs=contrib_specs,
                         leaf_specs=leaf_specs, dense_leaf_ids=dense_ids,
                         dense_buckets=buckets, gather_leaf_ids=gather_ids,
-                        config=config, schedule=schedule)
+                        config=config, schedule=schedule,
+                        leaf_blocks=leaf_blocks)
+
+
+def _path_block(path) -> str:
+    """Top-level block label of one key path: the first dict key /
+    sequence index / attribute name on the way to the leaf."""
+    if not path:
+        return ""
+    k = path[0]
+    for attr in ("key", "idx", "name"):
+        v = getattr(k, attr, None)
+        if v is not None:
+            return str(v)
+    return str(k)
+
+
+def leaf_block_labels(grads) -> Tuple[str, ...]:
+    """Per-leaf top-level block labels (flatten order, contribution
+    lists as single leaves) — the block partition wait-free backprop
+    snaps its buckets to."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(grads, is_leaf=_is_leaf)
+    return tuple(_path_block(path) for path, _ in flat)
 
 
 def compile_plan(grads, config: ExchangeConfig) -> ExchangePlan:
@@ -1095,7 +1199,8 @@ def compile_plan(grads, config: ExchangeConfig) -> ExchangePlan:
         _CACHE_STATS["hits"] += 1
         return cached
     _CACHE_STATS["misses"] += 1
-    plan = _build_plan(treedef, contrib_specs, config)
+    plan = _build_plan(treedef, contrib_specs, config,
+                       leaf_blocks=leaf_block_labels(grads))
     if len(_PLAN_CACHE) >= _PLAN_CACHE_MAX:       # FIFO bound: variable
         _PLAN_CACHE.pop(next(iter(_PLAN_CACHE)))  # token counts would
     _PLAN_CACHE[key] = plan                       # otherwise grow forever

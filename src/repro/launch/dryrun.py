@@ -215,7 +215,9 @@ def analyse(lowered, meta: Dict[str, Any], n_chips: int,
 def _audit_grads(arch: str, reduced: bool, batch_per_worker: int,
                  seq_len: int):
     """Real gradient-contribution tree for the audit (shared by the
-    shard_map and GSPMD audit paths)."""
+    shard_map and GSPMD audit paths).  Also returns the model, params
+    and batch so the wait-free audit can lower the REAL in-backward
+    exchange, not a standalone collective."""
     from repro.data import make_pipeline
     from repro.training.gradients import grad_contributions
 
@@ -229,7 +231,7 @@ def _audit_grads(arch: str, reduced: bool, batch_per_worker: int,
     batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(0).items()}
     grads, _, _ = grad_contributions(model, params, batch,
                                      sparse_embedding=True)
-    return cfg, grads
+    return cfg, grads, model, params, batch
 
 
 def _require_devices(n_workers: int) -> None:
@@ -252,7 +254,7 @@ def audit_exchange_plan(arch: str = "transformer-big", n_workers: int = 8,
                         wire_dtype: Optional[str] = None,
                         codec: str = "identity",
                         backend: str = "jax",
-                        overlap: bool = False,
+                        overlap=False,
                         error_feedback: bool = False,
                         batch_per_worker: int = 2,
                         seq_len: int = 32) -> Dict[str, Any]:
@@ -290,7 +292,8 @@ def audit_exchange_plan(arch: str = "transformer-big", n_workers: int = 8,
 
     from repro.optim import adamw as adamw_opt
 
-    cfg, grads = _audit_grads(arch, reduced, batch_per_worker, seq_len)
+    cfg, grads, model, params, batch = _audit_grads(
+        arch, reduced, batch_per_worker, seq_len)
     _require_devices(n_workers)
     if backend == "hierarchical":
         if n_workers % 2:
@@ -319,7 +322,35 @@ def audit_exchange_plan(arch: str = "transformer-big", n_workers: int = 8,
     # launch-all-then-unpack schedule.  Stateful codecs lower with the
     # ExchangeState threaded through (sharded over dim 0, one residual
     # slice per worker) — exactly the train step's calling convention.
-    if plan.config.codec_obj.stateful:
+    # overlap="backward" lowers the REAL wait-free gradient step — loss,
+    # backward pass, and the custom_vjp-tapped in-backward collectives —
+    # so the audited HLO is what training runs; the model compute adds
+    # zero collectives under the replicated in_specs, so the plan's
+    # counts and wire stay exact.
+    if plan.config.overlap_backward:
+        from repro.training.gradients import wait_free_grad_exchange
+
+        if plan.config.codec_obj.stateful:
+            state0 = plan.init_state(n_workers=n_workers)
+
+            def wf_fn(p_, b_, s):
+                dense, ns, _, _ = wait_free_grad_exchange(
+                    model, opt, p_, b_, state=s, sparse_embedding=True)
+                return dense, ns
+
+            ex = shard_map(wf_fn, mesh=mesh,
+                           in_specs=(P(), P(), P(axis_name)),
+                           out_specs=(P(), P(axis_name)), check_rep=False)
+            lower_args = (params, batch, state0)
+        else:
+            def wf_fn(p_, b_):
+                return wait_free_grad_exchange(
+                    model, opt, p_, b_, sparse_embedding=True)[0]
+
+            ex = shard_map(wf_fn, mesh=mesh, in_specs=(P(), P()),
+                           out_specs=P(), check_rep=False)
+            lower_args = (params, batch)
+    elif plan.config.codec_obj.stateful:
         state0 = plan.init_state(n_workers=n_workers)
 
         def ex_fn(g, s):
@@ -431,7 +462,8 @@ def audit_exchange_gspmd(arch: str = "transformer-big", n_workers: int = 8,
 
     from repro.optim import adamw as adamw_opt
 
-    cfg, grads = _audit_grads(arch, reduced, batch_per_worker, seq_len)
+    cfg, grads, _, _, _ = _audit_grads(arch, reduced, batch_per_worker,
+                                       seq_len)
     _require_devices(n_workers)
 
     opt = DistributedOptimizer(
@@ -581,11 +613,15 @@ def main(argv=None) -> int:
                          "the stateful error-feedback path (ExchangeState "
                          "threaded through the jitted exchange) and "
                          "verify it adds zero collectives / wire bytes")
-    ap.add_argument("--overlap", action="store_true",
+    ap.add_argument("--overlap", nargs="?", const="staged", default=None,
+                    choices=["staged", "backward"],
                     help="with --audit-exchange (shard_map mode): lower "
-                         "the staged BucketSchedule path and verify its "
-                         "per-stage collective counts sum to the fused "
-                         "plan's n_collectives")
+                         "the staged BucketSchedule path ('staged', the "
+                         "bare-flag default) or the wait-free in-backward "
+                         "path ('backward' — lowers the full gradient "
+                         "step with its custom_vjp-launched collectives) "
+                         "and verify the per-stage collective counts sum "
+                         "to the fused plan's n_collectives")
     ap.add_argument("--full-size", action="store_true",
                     help="with --audit-exchange: use the full (not "
                          "reduced) config")
@@ -627,7 +663,7 @@ def main(argv=None) -> int:
                 reduce_scatter=args.reduce_scatter,
                 wire_dtype=args.wire_dtype,
                 codec=args.codec, backend=args.backend,
-                overlap=args.overlap,
+                overlap=args.overlap or False,
                 error_feedback=args.error_feedback)
         print(json.dumps(result, indent=2, default=str))
         if args.out:

@@ -61,7 +61,7 @@ def build_optimizer(args, cfg) -> DistributedOptimizer:
             wire_dtype=args.wire_dtype,
             codec=args.codec,
             backend=args.backend,
-            overlap=args.overlap,
+            overlap=args.overlap or False,
             error_feedback=args.error_feedback,
         ),
         axis_name=axis,
@@ -141,11 +141,17 @@ def main(argv=None) -> int:
                          "quantisation error and fold it into the next "
                          "step's encode (threads an ExchangeState "
                          "through the train state and checkpoints)")
-    ap.add_argument("--overlap", action="store_true",
-                    help="staged BucketSchedule: launch per-bucket "
+    ap.add_argument("--overlap", nargs="?", const="staged", default=None,
+                    choices=["staged", "backward"],
+                    help="comm/compute overlap mode. 'staged' (also the "
+                         "bare-flag default): launch per-bucket "
                          "collectives in reverse-layer readiness order, "
                          "interleaved with the remaining accumulation "
-                         "compute, before any bucket unpacks")
+                         "compute, before any bucket unpacks. "
+                         "'backward': wait-free backprop — buckets are "
+                         "block-aligned and each block's collective "
+                         "launches from inside the backward pass, the "
+                         "moment its cotangents are emitted")
     ap.add_argument("--batch-per-worker", type=int, default=4)
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--steps", type=int, default=50)

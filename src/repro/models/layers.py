@@ -540,3 +540,48 @@ def tied_logits(table: jax.Array, h: jax.Array) -> jax.Array:
     """Projection through the shared embedding: produces the DENSE
     cotangent contribution to the tied weight."""
     return jnp.einsum("bsd,vd->bsv", h, table)
+
+
+# ---------------------------------------------------------------------------
+# Wait-free backprop: per-block custom_vjp gradient hook
+# ---------------------------------------------------------------------------
+
+def backward_hook(bwd_fn):
+    """Identity boundary on a parameter block whose ``custom_vjp``
+    backward runs ``bwd_fn`` on the block's cotangent the MOMENT
+    autodiff emits it — the MG-WFBP hook that lets the ExchangePlan
+    launch a bucket's collective while earlier layers are still
+    differentiating.
+
+    ``bwd_fn(g_block, state, extra) -> (g_out, new_state)``:
+    ``g_block`` is the raw cotangent pytree of the block, ``state`` is
+    arbitrary differentiable side state (e.g. this block's codec
+    residuals) threaded OUT of the backward as the cotangent of the
+    ``state`` input, and ``extra`` rides along read-only (e.g. partial
+    microbatch sums; its cotangent is zeros and gets DCE'd).  The
+    returned hook is ``hook(block_params, state, extra) ->
+    block_params`` — an exact identity in forward, so the loss graph
+    (and therefore every cotangent) is bitwise identical to the
+    unhooked model."""
+    @jax.custom_vjp
+    def hook(x, state, extra):
+        return x
+
+    def fwd(x, state, extra):
+        return x, (state, extra)
+
+    def bwd(res, g):
+        state, extra = res
+        g_out, new_state = bwd_fn(g, state, extra)
+
+        def zero_ct(x):     # integer leaves take float0 cotangents
+            if jnp.issubdtype(x.dtype, jnp.inexact):
+                return jnp.zeros_like(x)
+            import numpy as _np
+            return _np.zeros(x.shape, jax.dtypes.float0)
+
+        zeros = jax.tree_util.tree_map(zero_ct, extra)
+        return g_out, new_state, zeros
+
+    hook.defvjp(fwd, bwd)
+    return hook

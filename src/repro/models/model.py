@@ -136,6 +136,24 @@ class Model:
             params["layers"] = jax.vmap(lambda k: _init_block(k, cfg))(keys)
         return params
 
+    # ---------------- wait-free backprop block partition ----------------
+    def grad_blocks(self, params: Params) -> Tuple[str, ...]:
+        """Top-level parameter blocks in BACKWARD-EMISSION order — the
+        ``custom_vjp`` hook boundaries wait-free exchange
+        (``ExchangeConfig(overlap='backward')``) snaps its buckets to.
+
+        Layer stacks are scanned (``jax.lax.scan`` over stacked params
+        for every family: transformer ``layers``, hybrid
+        ``mamba``/``shared_attn``, ssm ``mlstm``/``slstm``), so the
+        finest autodiff-visible emission events are the TOP-LEVEL param
+        groups: a scanned stack's cotangent materialises in one piece
+        when the scan's backward completes.  Dict flattening is
+        key-sorted and backward emits leaves in reverse flatten order
+        (head first, embedding last) — the same convention the
+        BucketSchedule's readiness keys already encode — so the
+        partition is simply the sorted keys, reversed."""
+        return tuple(sorted(params.keys(), reverse=True))
+
     # ---------------- heads ----------------
     def head(self, params: Params, h: jax.Array) -> jax.Array:
         if self.cfg.tied_embeddings:

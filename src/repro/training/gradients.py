@@ -14,12 +14,16 @@ contribution list that trips TF's Algorithm 1 (see paper §3).
 """
 from __future__ import annotations
 
+import math
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import comm, exchange as exchange_lib
+from repro.core.codecs import ExchangeState
 from repro.core.indexed_slices import IndexedSlices
+from repro.models.layers import backward_hook
 
 
 def grad_contributions(model, params, batch: Dict[str, jax.Array],
@@ -79,3 +83,231 @@ def abstract_grad_contributions(model, params, batch,
         lambda p, b: grad_contributions(
             model, p, b, sparse_embedding=sparse_embedding, **loss_kw)[0],
         params, batch)
+
+
+# -- wait-free backprop (overlap="backward") ---------------------------------
+
+def _as_list(x) -> list:
+    return x if isinstance(x, list) else [x]
+
+
+def _is_contrib(x) -> bool:
+    return isinstance(x, (list, IndexedSlices))
+
+
+def _sds(x):
+    return jax.ShapeDtypeStruct(x.shape, x.dtype)
+
+
+def _contrib_sds(c):
+    if isinstance(c, IndexedSlices):
+        return IndexedSlices(_sds(c.indices), _sds(c.values),
+                             tuple(c.dense_shape))
+    return _sds(c)
+
+
+def wait_free_contribution_structs(model, params, batch,
+                                   sparse_embedding: bool = False,
+                                   partial=None):
+    """The abstract contribution tree the wait-free step WILL assemble —
+    same structure ``grad_contributions`` (+ deferred-microbatch
+    combining) hands the fused exchange, built without tracing a
+    backward pass, so ``compile_plan`` here and on the fused path hit
+    the same cache entry and ``ExchangeState``s stay interchangeable."""
+    g: Dict[str, Any] = {k: jax.tree_util.tree_map(_sds, v)
+                         for k, v in params.items()}
+    if sparse_embedding:
+        tokens = batch["tokens"]
+        rows = math.prod(tokens.shape)
+        emb = params["embedding"]
+        slices = IndexedSlices(
+            indices=jax.ShapeDtypeStruct((rows,), jnp.int32),
+            values=jax.ShapeDtypeStruct((rows, model.cfg.d_model),
+                                        emb.dtype),
+            dense_shape=tuple(emb.shape))
+        g["embedding"] = ([slices, _sds(emb)]
+                          if model.cfg.tied_embeddings else [slices])
+    if partial is not None:
+        g = jax.tree_util.tree_map(
+            lambda a, b: [_contrib_sds(c) for c in _as_list(a)]
+            + _as_list(b),
+            partial, g, is_leaf=_is_contrib)
+    return g
+
+
+def wait_free_grad_exchange(model, opt, params, batch, *,
+                            state=None, sparse_embedding: bool = False,
+                            partial=None, loss_scale=None,
+                            loss_denom: int = 1, **loss_kw):
+    """Gradient step with bucket collectives launched INSIDE the
+    backward pass (MG-WFBP-style wait-free backprop).
+
+    Every top-level parameter block is wrapped in a ``custom_vjp``
+    identity tap; the tap's bwd rule receives the block's cotangents the
+    moment backprop emits them, folds in any deferred-microbatch
+    ``partial`` contribution, and runs that block's bucket stages
+    (accumulate -> launch -> finish) right there — so block N's
+    collective is in flight while blocks N-1..0 are still
+    differentiating.  Per-bucket codec state rides along as a tap input
+    whose COTANGENT is the updated state, so ``ExchangeState`` threads
+    out of ``jax.grad`` without side channels.  Gather stages (sparse
+    embedding) and unhooked blocks run as a tail after autodiff, through
+    the same launch/finish primitives.
+
+    The per-stage ops are exactly ``execute_fused``'s, in the same
+    schedule order, so for linear codecs the result is BITWISE identical
+    to the fused exchange of the same contribution tree.
+
+    ``loss_scale`` multiplies the LOSS before differentiation (power-of-2
+    scales commute exactly with every rounding step, so cotangents match
+    post-hoc grad scaling bitwise); ``loss_denom`` divides every final-
+    microbatch contribution (the deferred-microbatch ``g/n``); ``partial``
+    is the already-scaled first-(n-1)-microbatch contribution tree.
+
+    Returns ``(dense grad tree, new ExchangeState or None, loss,
+    metrics)``; loss/metrics are unscaled and from this batch only.
+    """
+    cfg = opt.exchange_config
+    structs = wait_free_contribution_structs(
+        model, params, batch, sparse_embedding=sparse_embedding,
+        partial=partial)
+    plan = exchange_lib.compile_plan(structs, cfg)
+    axes = plan._check_axes(opt.axis_name)
+    p = comm.axis_size(axes) if axes else 1
+    inv_scale = (1.0 / p) if opt.average and axes else None
+    checked = plan._check_state(state)
+    stage_states = plan._stage_states(checked)
+
+    hooked_blocks = set(params)
+    if sparse_embedding:
+        hooked_blocks.discard("embedding")
+    block_stages, tail_ids = plan.backward_block_stages(hooked_blocks)
+
+    # global leaf ids per block, in flatten order — a block's subtree
+    # flattens to the same relative order, so ids zip with its leaves
+    block_leaf_ids: Dict[str, list] = {}
+    for i, b in enumerate(plan.leaf_blocks):
+        block_leaf_ids.setdefault(b, []).append(i)
+
+    def _div(c):
+        return c if loss_denom == 1 else c / loss_denom
+
+    def make_bwd(key, stage_ids):
+        ids = block_leaf_ids[key]
+        has_partial = partial is not None
+
+        def bwd_fn(g_block, bstates, partial_block):
+            g_leaves = jax.tree_util.tree_leaves(g_block)
+            p_leaves = (jax.tree_util.tree_leaves(partial_block)
+                        if has_partial else [None] * len(g_leaves))
+            raw: list = [None] * plan.n_leaves
+            for lid, gl, pl in zip(ids, g_leaves, p_leaves):
+                c = _div(gl)
+                raw[lid] = [pl, c] if has_partial else c
+            acc: list = [None] * plan.n_leaves
+            out: list = [None] * plan.n_leaves
+            new_states = []
+            for sid, bs in zip(stage_ids, bstates):
+                st = plan.schedule.stages[sid]
+                plan._accumulate_stage(st, raw, acc)
+                fl, nb = plan.launch_stage(st, acc, axes, p, bs)
+                new_states.append(nb)
+                plan.finish_stage(st, fl, out, inv_scale, axes, p)
+            g_out = jax.tree_util.tree_unflatten(
+                jax.tree_util.tree_structure(params[key]),
+                [out[lid] for lid in ids])
+            return g_out, tuple(new_states)
+
+        return bwd_fn
+
+    hooks = {key: backward_hook(make_bwd(key, sids))
+             for key, sids in block_stages.items()}
+    states_in = {key: tuple(stage_states[sid] for sid in sids)
+                 for key, sids in block_stages.items()}
+    extras = {key: (partial[key] if partial is not None else ())
+              for key in block_stages}
+
+    taps = None
+    if sparse_embedding:
+        tokens = batch["tokens"]
+        taps = jnp.zeros(tokens.shape + (model.cfg.d_model,),
+                         params["embedding"].dtype)
+
+    def tapped_loss(p_, states_, taps_):
+        tp = dict(p_)
+        for key, hook in hooks.items():
+            tp[key] = hook(p_[key], states_[key], extras[key])
+        if taps_ is None:
+            loss, metrics = model.loss(tp, batch, **loss_kw)
+        else:
+            loss, metrics = model.loss(tp, batch, taps=taps_, **loss_kw)
+        scaled = loss if loss_scale is None else loss * loss_scale
+        return scaled, (loss, metrics)
+
+    if sparse_embedding:
+        (_, (loss, metrics)), (g_params, g_states, g_taps) = \
+            jax.value_and_grad(tapped_loss, argnums=(0, 1, 2),
+                               has_aux=True)(params, states_in, taps)
+    else:
+        (_, (loss, metrics)), (g_params, g_states) = \
+            jax.value_and_grad(tapped_loss, argnums=(0, 1),
+                               has_aux=True)(params, states_in, None)
+        g_taps = None
+
+    # -- tail: contributions assembled OUTSIDE autodiff ----------------------
+    contrib: Dict[str, Any] = {}
+    for key in params:
+        if key in block_stages:
+            contrib[key] = g_params[key]   # already exchanged; placeholder
+            continue
+        if key == "embedding" and sparse_embedding:
+            slices = IndexedSlices(
+                indices=tokens.reshape(-1).astype(jnp.int32),
+                values=_div(g_taps.reshape(-1, model.cfg.d_model)),
+                dense_shape=tuple(params["embedding"].shape))
+            c: Any = ([slices, _div(g_params["embedding"])]
+                      if model.cfg.tied_embeddings else [slices])
+        else:
+            c = jax.tree_util.tree_map(_div, g_params[key])
+        if partial is not None:
+            c = jax.tree_util.tree_map(
+                lambda a, b: _as_list(a) + _as_list(b),
+                partial[key], c, is_leaf=_is_contrib)
+        contrib[key] = c
+
+    raw_tail, _ = jax.tree_util.tree_flatten(contrib,
+                                             is_leaf=exchange_lib._is_leaf)
+    acc: list = [None] * plan.n_leaves
+    out: list = [None] * plan.n_leaves
+    tail_states: Dict[int, Any] = {}
+    for sid in tail_ids:
+        st = plan.schedule.stages[sid]
+        plan._accumulate_stage(st, raw_tail, acc)
+        fl, nb = plan.launch_stage(st, acc, axes, p, stage_states[sid])
+        tail_states[sid] = nb
+        plan.finish_stage(st, fl, out, inv_scale, axes, p)
+
+    # -- assemble -------------------------------------------------------------
+    out_leaves: list = [None] * plan.n_leaves
+    for key, sids in block_stages.items():
+        for lid, val in zip(block_leaf_ids[key],
+                            jax.tree_util.tree_leaves(g_params[key])):
+            out_leaves[lid] = val
+    for sid in tail_ids:
+        for lid in plan.schedule.stages[sid].leaf_ids:
+            out_leaves[lid] = out[lid]
+    dense_tree = jax.tree_util.tree_unflatten(plan.treedef, out_leaves)
+
+    new_state = None
+    if checked is not None:
+        merged = list(stage_states)
+        for key, sids in block_stages.items():
+            for j, sid in enumerate(sids):
+                merged[sid] = g_states[key][j]
+        for sid, nb in tail_states.items():
+            merged[sid] = nb
+        new_state = ExchangeState(merged)
+
+    metrics = dict(metrics,
+                   exchange_stages=jnp.int32(plan.schedule.n_stages))
+    return dense_tree, new_state, loss, metrics

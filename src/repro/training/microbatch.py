@@ -21,7 +21,8 @@ from typing import Any, Callable, Dict, NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.training.gradients import grad_contributions
+from repro.training.gradients import (grad_contributions,
+                                      wait_free_grad_exchange)
 from repro.core.indexed_slices import IndexedSlices
 
 
@@ -151,6 +152,64 @@ def accumulate_microbatches(model, params, stacked_batch,
     return grads, sum(losses) / n, {}
 
 
+def accumulate_partial_microbatches(model, params, stacked_batch,
+                                    sparse_embedding: bool = False,
+                                    **loss_kw):
+    """First n-1 microbatches folded into the deferred ``partial``
+    contribution — op for op the same computation as
+    ``accumulate_microbatches(defer_final=True)``'s partial entry, so
+    the two representations are bitwise interchangeable.  Returns
+    ``(partial, final_microbatch, partial_loss_sum, n)``; the wait-free
+    step (``overlap="backward"``) differentiates only the FINAL
+    microbatch and folds ``partial`` in per block inside the backward
+    pass.  ``partial`` is ``None`` when there is only one microbatch."""
+    n = jax.tree_util.tree_leaves(stacked_batch)[0].shape[0]
+    mb_last = jax.tree_util.tree_map(lambda x: x[-1], stacked_batch)
+    if n == 1:
+        return None, mb_last, jnp.float32(0.0), n
+
+    def one(mb):
+        return grad_contributions(model, params, mb,
+                                  sparse_embedding=sparse_embedding,
+                                  **loss_kw)
+
+    if not sparse_embedding:
+        def body(carry, mb):
+            acc, loss_sum = carry
+            g, loss, _ = one(mb)
+            acc = jax.tree_util.tree_map(jnp.add, acc, g)
+            return (acc, loss_sum + loss), None
+
+        mb0 = jax.tree_util.tree_map(lambda x: x[0], stacked_batch)
+        g0, loss0, _ = one(mb0)
+        rest = jax.tree_util.tree_map(lambda x: x[1:-1], stacked_batch)
+        (acc, loss_sum), _ = jax.lax.scan(body, (g0, loss0), rest)
+        partial = jax.tree_util.tree_map(lambda a: a / n, acc)
+        return partial, mb_last, loss_sum, n
+
+    grads_list, losses = [], []
+    for i in range(n - 1):
+        mb = jax.tree_util.tree_map(lambda x: x[i], stacked_batch)
+        g, loss, _ = one(mb)
+        grads_list.append(g)
+        losses.append(loss)
+    partial = (grads_list[0] if n == 2 else jax.tree_util.tree_map(
+        _make_combine(1), *grads_list, is_leaf=_is_contrib_leaf))
+    partial = _scale_contribs(partial, n)
+    return partial, mb_last, sum(losses), n
+
+
+def _scale_grad_tree(grads, scale):
+    """Multiply every contribution (dense, list, IndexedSlices) by the
+    loss scale — the post-hoc grad scaling the fused path applies."""
+    return jax.tree_util.tree_map(
+        lambda g: g * scale if not isinstance(g, list)
+        else [c * scale if not isinstance(c, IndexedSlices)
+              else IndexedSlices(c.indices, c.values * scale,
+                                 c.dense_shape) for c in g],
+        grads, is_leaf=lambda x: isinstance(x, list))
+
+
 class ScalerState(NamedTuple):
     scale: jax.Array           # current loss scale
     good_steps: jax.Array      # consecutive finite-grad steps
@@ -216,38 +275,59 @@ def make_scaled_train_step(model, opt, scaler: LossScaler,
     from repro.optim.base import apply_updates
 
     cfg = getattr(opt, "exchange_config", None)
-    defer_final = (cfg is not None and cfg.overlap
+    wait_free = cfg is not None and cfg.overlap_backward
+    defer_final = (cfg is not None and cfg.overlap and not wait_free
                    and n_microbatches > 1)
     stateful = cfg is not None and cfg.codec_obj.stateful
 
     def _core(params, opt_state, scaler_state, batch, ex_state):
-        def loss_fn(p, b):
-            if n_microbatches > 1:
-                stacked = split_microbatches(b, n_microbatches)
-                g, loss, metrics = accumulate_microbatches(
-                    model, p, stacked, sparse_embedding=sparse_embedding,
-                    defer_final=defer_final, **loss_kw)
-            else:
-                g, loss, metrics = grad_contributions(
-                    model, p, b, sparse_embedding=sparse_embedding,
-                    **loss_kw)
-            return g, loss, metrics
-
-        # scale by differentiating the SCALED loss: equivalent to grad*scale
         old_scale = scaler_state.scale
-        grads, loss, metrics = loss_fn(params, batch)
-        grads = jax.tree_util.tree_map(
-            lambda g: g * scaler_state.scale if not isinstance(g, list)
-            else [c * scaler_state.scale if not isinstance(c, IndexedSlices)
-                  else IndexedSlices(c.indices,
-                                     c.values * scaler_state.scale,
-                                     c.dense_shape) for c in g],
-            grads, is_leaf=lambda x: isinstance(x, list))
-        if ex_state is None:
-            dense = opt.exchange(grads)
+        prev_ex_state = ex_state
+        if wait_free:
+            # overlap="backward": differentiate only the FINAL
+            # microbatch; its block cotangents trigger the collectives
+            # mid-backward, each stage folding in the (already-scaled)
+            # partial sum of the first n-1 microbatches.  Loss scaling
+            # multiplies the LOSS pre-differentiation — power-of-2
+            # scales commute bitwise with post-hoc grad scaling.
+            if n_microbatches > 1:
+                stacked = split_microbatches(batch, n_microbatches)
+                partial, mb_last, loss_sum, _n = \
+                    accumulate_partial_microbatches(
+                        model, params, stacked,
+                        sparse_embedding=sparse_embedding, **loss_kw)
+                partial = _scale_grad_tree(partial, old_scale)
+            else:
+                partial, mb_last, loss_sum = None, batch, None
+            dense, ex_state, loss_last, metrics = wait_free_grad_exchange(
+                model, opt, params, mb_last, state=ex_state,
+                sparse_embedding=sparse_embedding, partial=partial,
+                loss_scale=old_scale, loss_denom=n_microbatches,
+                **loss_kw)
+            loss = (loss_last if loss_sum is None
+                    else (loss_sum + loss_last) / n_microbatches)
         else:
-            prev_ex_state = ex_state
-            dense, ex_state = opt.exchange(grads, state=ex_state)
+            def loss_fn(p, b):
+                if n_microbatches > 1:
+                    stacked = split_microbatches(b, n_microbatches)
+                    g, loss, metrics = accumulate_microbatches(
+                        model, p, stacked,
+                        sparse_embedding=sparse_embedding,
+                        defer_final=defer_final, **loss_kw)
+                else:
+                    g, loss, metrics = grad_contributions(
+                        model, p, b, sparse_embedding=sparse_embedding,
+                        **loss_kw)
+                return g, loss, metrics
+
+            # scale by differentiating the SCALED loss: equivalent to
+            # grad*scale
+            grads, loss, metrics = loss_fn(params, batch)
+            grads = _scale_grad_tree(grads, scaler_state.scale)
+            if ex_state is None:
+                dense = opt.exchange(grads)
+            else:
+                dense, ex_state = opt.exchange(grads, state=ex_state)
         dense, finite, scaler_state = scaler.unscale_and_check(
             dense, scaler_state)
         updates, new_opt_state = opt.base.update(dense, opt_state, params)

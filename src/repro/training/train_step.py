@@ -29,7 +29,8 @@ import jax.numpy as jnp
 
 from repro.core.dist_opt import DistributedOptimizer
 from repro.optim.base import apply_updates
-from repro.training.gradients import grad_contributions
+from repro.training.gradients import (grad_contributions,
+                                      wait_free_grad_exchange)
 
 
 def make_train_step(model, opt: DistributedOptimizer,
@@ -41,23 +42,32 @@ def make_train_step(model, opt: DistributedOptimizer,
     opt_state, exchange_state, metrics)."""
     cfg = getattr(opt, "exchange_config", None)
     overlap = cfg is not None and cfg.overlap
+    wait_free = cfg is not None and cfg.overlap_backward
     stateful = cfg is not None and cfg.codec_obj.stateful
 
     def _core(params, opt_state, batch, ex_state):
-        grads, loss, metrics = grad_contributions(
-            model, params, batch, sparse_embedding=sparse_embedding,
-            **loss_kw)
-        do_exchange = (opt.exchange_scheduled if overlap
-                       else opt.exchange)
-        if ex_state is None:
-            dense = do_exchange(grads)
+        if wait_free:
+            # overlap="backward": collectives launch from inside the
+            # backward pass, per block, via custom_vjp taps
+            dense, ex_state, loss, metrics = wait_free_grad_exchange(
+                model, opt, params, batch, state=ex_state,
+                sparse_embedding=sparse_embedding, **loss_kw)
+            metrics = dict(metrics, loss=loss)
         else:
-            dense, ex_state = do_exchange(grads, state=ex_state)
+            grads, loss, metrics = grad_contributions(
+                model, params, batch, sparse_embedding=sparse_embedding,
+                **loss_kw)
+            do_exchange = (opt.exchange_scheduled if overlap
+                           else opt.exchange)
+            if ex_state is None:
+                dense = do_exchange(grads)
+            else:
+                dense, ex_state = do_exchange(grads, state=ex_state)
+            n_stages = opt.plan(grads).schedule.n_stages
+            metrics = dict(metrics, loss=loss,
+                           exchange_stages=jnp.int32(n_stages))
         updates, opt_state = opt.base.update(dense, opt_state, params)
         params = apply_updates(params, updates)
-        n_stages = opt.plan(grads).schedule.n_stages
-        metrics = dict(metrics, loss=loss,
-                       exchange_stages=jnp.int32(n_stages))
         return params, opt_state, ex_state, metrics
 
     if cfg is None:
