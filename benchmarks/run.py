@@ -15,6 +15,7 @@
 #   Fig 12              : quality_invariance
 #   §Roofline           : roofline  (aggregates experiments/dryrun)
 #   §Overlap            : overlap   (exposed vs hidden communication time)
+#   §Autotuner          : tune      (analytic rank vs measured rank)
 import argparse
 import json
 import sys
@@ -44,8 +45,9 @@ def main() -> None:
                ("strong_scaling", strong_scaling),
                ("roofline", roofline)]
     if not args.fast:
-        from benchmarks import quality_invariance
+        from benchmarks import quality_invariance, tune
         modules.insert(5, ("quality_invariance", quality_invariance))
+        modules.append(("tune", tune))
     if args.only:
         keys = args.only.split(",")
         modules = [(n, m) for n, m in modules

@@ -34,7 +34,11 @@ from repro.core import ExchangeConfig, IndexedSlices, compile_plan
 from repro.core.fusion import DEFAULT_FUSION_THRESHOLD
 from repro.launch import specs as specs_lib
 
-BW = 12.5e9            # Omni-Path 100 Gb/s
+# Omni-Path 100 Gb/s — the paper cluster's cross-node links, read from
+# the shared BandwidthProfile preset (single source with the tuner)
+from repro.tuning.profile import get_profile
+
+BW = get_profile("ib").cross_bw
 TOKENS_PER_WORKER = 5000
 
 

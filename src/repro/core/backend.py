@@ -121,6 +121,22 @@ class CollectiveBackend:
         """Per-level wire bytes for one gather bucket."""
         return (self.gather_wire_bytes(payload_bytes, levels),)
 
+    # -- per-mesh-level launch accounting (tuning cost metadata) ------------
+    # Split the SAME way as the *_hop_wire_bytes pair above so the cost
+    # model (repro.tuning.cost) can bill each hop's launches at that
+    # mesh level's α latency next to its β bandwidth term.  Flat
+    # backends launch everything in one hop; totals always agree with
+    # hlo_ops_dense / hlo_ops_gather (the audit contract).
+    def dense_hop_ops(self, kind: str, codec: WireCodec,
+                      levels: Sequence[int]) -> Tuple[int, ...]:
+        """Per-level collective-op counts for one dense bucket."""
+        return (self.hlo_ops_dense(kind, codec, levels),)
+
+    def gather_hop_ops(self, n_tensors: int,
+                       levels: Sequence[int]) -> Tuple[int, ...]:
+        """Per-level collective-op counts for one gather bucket."""
+        return (self.hlo_ops_gather(n_tensors, levels),)
+
     def allreduce_wire_bytes(self, n_elems: int, wire_dtype,
                              levels: Sequence[int]) -> int:
         raise NotImplementedError
@@ -280,6 +296,16 @@ class HierarchicalBackend(JaxCollectives):
         if kind == ALLREDUCE:
             return len(levels)             # one psum per axis
         raise ValueError("hierarchical backend has no RS+AG path")
+
+    def dense_hop_ops(self, kind, codec, levels):
+        if not codec.linear:
+            return tuple(2 for _ in levels)   # (values, scales) per hop
+        if kind == ALLREDUCE:
+            return tuple(1 for _ in levels)   # one psum per axis
+        raise ValueError("hierarchical backend has no RS+AG path")
+
+    def gather_hop_ops(self, n_tensors, levels):
+        return tuple(n_tensors for _ in levels)
 
     def logical_collectives(self, kind, n_levels=1):
         if kind == ALLREDUCE:

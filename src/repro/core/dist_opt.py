@@ -67,6 +67,8 @@ class ExchangeStats:
     state_bytes: int = 0         # per-worker codec-state memory (residuals)
     state_bytes_per_bucket: tuple = ()   # same, stage by stage
     hop_wire_bytes: tuple = ()   # per-mesh-level wire (hierarchical runs)
+    predicted_comm_us: float = 0.0   # cost-model estimate (repro.tuning)
+    cost_profile: str = ""       # BandwidthProfile the estimate used
 
     def describe(self) -> str:
         """One-look summary of what the exchange will actually run:
@@ -81,6 +83,9 @@ class ExchangeStats:
                 f"accumulated_bytes={self.accumulated_bytes} "
                 f"stages={self.n_stages} "
                 f"overlap={mode}")
+        if self.cost_profile:
+            head += (f" predicted_comm_us={self.predicted_comm_us:.1f} "
+                     f"(profile={self.cost_profile})")
         if self.state_bytes:
             per = ",".join(str(b) for b in self.state_bytes_per_bucket)
             head += (f"\ncodec state: {self.state_bytes} B/worker "
@@ -208,9 +213,23 @@ class DistributedOptimizer:
         return self.plan(tree).broadcast(tree, self.axis_name, root=root)
 
     # -- static accounting (no devices needed) -------------------------------
-    def exchange_stats(self, grads,
-                       n_workers: Union[int, tuple]) -> ExchangeStats:
+    def exchange_stats(self, grads, n_workers: Union[int, tuple],
+                       profile: str = "ib") -> ExchangeStats:
+        """Static per-step accounting plus the cost model's
+        ``predicted_comm_us`` under ``profile`` (a BandwidthProfile
+        preset name, JSON path, or instance; ``None`` skips the
+        prediction)."""
         plan = self.plan(grads)
+        predicted_us, profile_name = 0.0, ""
+        if profile is not None:
+            # lazy import: repro.tuning consumes repro.core, not the
+            # other way round at import time
+            from repro.tuning import cost as tuning_cost
+            from repro.tuning.profile import get_profile
+            prof = get_profile(profile)
+            predicted_us = tuning_cost.predict_comm_us(plan, n_workers,
+                                                       prof)
+            profile_name = prof.name
         cfg = plan.config
         strategy = ("dense_reduce" if cfg.sparse_as_dense
                     else f"{cfg.algorithm}")
@@ -233,4 +252,6 @@ class DistributedOptimizer:
             schedule_table=plan.describe_schedule(n_workers),
             state_bytes=plan.state_bytes(),
             state_bytes_per_bucket=plan.state_bytes_per_stage(),
-            hop_wire_bytes=plan.hop_wire_bytes(n_workers))
+            hop_wire_bytes=plan.hop_wire_bytes(n_workers),
+            predicted_comm_us=predicted_us,
+            cost_profile=profile_name)

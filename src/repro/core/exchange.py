@@ -47,6 +47,7 @@ benchmarks, and the roofline/scaling models.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import math
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
@@ -406,6 +407,13 @@ class ExchangePlan:
         return len(self.leaf_specs)
 
     @property
+    def fingerprint(self) -> str:
+        """Stable digest of the gradient-tree structure this plan was
+        compiled for (see ``tree_fingerprint``) — the plan-cache key
+        component and, in structural form, the tuning-artifact key."""
+        return tree_fingerprint(self.treedef, self.contrib_specs)
+
+    @property
     def n_buckets(self) -> int:
         return len(self.dense_buckets) + len(self.gather_leaf_ids)
 
@@ -472,6 +480,23 @@ class ExchangePlan:
                 levels)
         n_tensors = 2 + (0 if codec.linear else 1)
         return be.hlo_ops_gather(n_tensors, levels)
+
+    def stage_hop_ops(self, stage: BucketStage,
+                      n_workers: Union[int, Sequence[int]]
+                      ) -> Tuple[int, ...]:
+        """Per-mesh-level collective-op counts for one stage — the α
+        (launch latency) companion of ``stage_hop_wire_bytes``, split
+        the same way so the cost model can bill each level's launches
+        at that level's latency.  Sums to ``stage_hlo_collectives``."""
+        levels = self._levels(n_workers)
+        be = self.config.backend_obj
+        codec = self.config.codec_obj
+        if stage.kind == "dense":
+            return be.dense_hop_ops(
+                self.dense_buckets[stage.bucket_id].collective, codec,
+                levels)
+        n_tensors = 2 + (0 if codec.linear else 1)
+        return be.gather_hop_ops(n_tensors, levels)
 
     def _wire_dtype_for(self, spec: LeafSpec) -> str:
         return self.config.codec_obj.wire_dtype(spec.dtype)
@@ -1090,6 +1115,45 @@ _PLAN_CACHE: Dict[Any, ExchangePlan] = {}
 _PLAN_CACHE_MAX = 256      # specs include sparse row counts, which vary
 _CACHE_STATS = {"hits": 0, "misses": 0}
 
+_FINGERPRINT_VERSION = "fp1"
+
+
+def tree_fingerprint(treedef, contrib_specs, exact: bool = True) -> str:
+    """Stable hex digest of a gradient-tree structure: treedef + every
+    contribution's shape/dtype specs.  Deterministic across process
+    restarts (sha256 of the canonical repr — NOT Python's salted
+    ``hash``), so it can key on-disk artifacts; equal-but-reconstructed
+    treedefs digest identically, so it also keys the in-process plan
+    cache without aliasing distinct structures.
+
+    ``exact=False`` elides sparse row counts (which scale with the
+    microbatch token count): the STRUCTURAL fingerprint the tuning
+    artifact is keyed by, so one tuned config covers every batch size
+    of the same model.  The plan cache always uses ``exact=True`` —
+    plans bill wire bytes per row and must not alias."""
+    if not exact:
+        contrib_specs = tuple(
+            tuple(dataclasses.replace(c, rows=0)
+                  if isinstance(c, SparseSpec) else c for c in contribs)
+            for contribs in contrib_specs)
+    payload = repr((_FINGERPRINT_VERSION, exact, str(treedef),
+                    contrib_specs))
+    return hashlib.sha256(payload.encode()).hexdigest()[:16]
+
+
+def fingerprint(grads, exact: bool = True) -> str:
+    """``tree_fingerprint`` of a gradient tree (concrete arrays,
+    tracers, or ShapeDtypeStructs — only structure matters)."""
+    leaves, treedef = jax.tree_util.tree_flatten(grads, is_leaf=_is_leaf)
+    return tree_fingerprint(treedef, _contrib_specs(leaves), exact=exact)
+
+
+def _contrib_specs(leaves) -> Tuple[Tuple[LeafSpec, ...], ...]:
+    return tuple(
+        tuple(contribution_spec(c)
+              for c in (leaf if isinstance(leaf, list) else [leaf]))
+        for leaf in leaves)
+
 
 def _build_plan(treedef, contrib_specs: Tuple[Tuple[LeafSpec, ...], ...],
                 config: ExchangeConfig,
@@ -1189,11 +1253,11 @@ def compile_plan(grads, config: ExchangeConfig) -> ExchangePlan:
     tree.  Works on concrete arrays, tracers, and ShapeDtypeStructs —
     only treedef + shapes/dtypes matter."""
     leaves, treedef = jax.tree_util.tree_flatten(grads, is_leaf=_is_leaf)
-    contrib_specs = tuple(
-        tuple(contribution_spec(c)
-              for c in (leaf if isinstance(leaf, list) else [leaf]))
-        for leaf in leaves)
-    key = (treedef, contrib_specs, config)
+    contrib_specs = _contrib_specs(leaves)
+    # keyed on the stable structural digest, not the treedef object:
+    # equal-but-reconstructed treedefs (a fresh dict of the same params
+    # every step) hit the same entry
+    key = (tree_fingerprint(treedef, contrib_specs), config)
     cached = _PLAN_CACHE.get(key)
     if cached is not None:
         _CACHE_STATS["hits"] += 1

@@ -34,6 +34,13 @@ from repro.models import build_model
 from repro.models.activation_sharding import activation_sharding
 from repro.optim import adamw, noam_schedule
 from repro.training import make_train_step
+from repro.tuning import cost as tuning_cost
+from repro.tuning import profile as profile_lib
+# note: repro.tuning re-exports the search() FUNCTION, which shadows
+# the submodule attribute on the package — resolve the module itself
+import importlib
+search_lib = importlib.import_module("repro.tuning.search")
+
 
 def lower_step(arch: str, shape_name: str, multi_pod: bool,
                mode: str = "gspmd", fsdp: bool = True, pure_dp: bool = False,
@@ -181,12 +188,11 @@ def analyse(lowered, meta: Dict[str, Any], n_chips: int,
         jx = flops_lib.count_fn_flops(fn, *args)
     flops_dev = jx["flops"] / n_chips
 
-    compute_s = flops_dev / mesh_lib.PEAK_FLOPS_BF16
-    memory_s = hbm_bytes / mesh_lib.HBM_BW
-    collective_s = coll_total / mesh_lib.ICI_BW
-    terms = {"compute_s": compute_s, "memory_s": memory_s,
-             "collective_s": collective_s}
-    dominant = max(terms, key=terms.get)
+    # the roofline terms come from the shared library cost model (TPU
+    # preset: the interconnect this lowering targets)
+    from repro.tuning.cost import roofline_terms
+    terms = roofline_terms(flops_dev, hbm_bytes, coll_total, "tpu")
+    dominant = terms.pop("dominant")
 
     out = dict(meta)
     out.update(
@@ -257,7 +263,8 @@ def audit_exchange_plan(arch: str = "transformer-big", n_workers: int = 8,
                         overlap=False,
                         error_feedback: bool = False,
                         batch_per_worker: int = 2,
-                        seq_len: int = 32) -> Dict[str, Any]:
+                        seq_len: int = 32,
+                        profile: str = "ib") -> Dict[str, Any]:
     """Check the static ExchangePlan against lowered HLO.
 
     Lowers the plan-scheduled exchange under ``shard_map`` on
@@ -393,13 +400,18 @@ def audit_exchange_plan(arch: str = "transformer-big", n_workers: int = 8,
                                      comm.dtype_bytes(wire_dt) / 4))
     # the staged schedule must be a pure reordering of the fused plan:
     # per-stage collective counts sum to the fused config's
-    # n_collectives (the ISSUE acceptance contract)
+    # n_collectives (the ISSUE acceptance contract).  overlap="backward"
+    # re-buckets (block-aligned so each collective has an in-backward
+    # trigger), so its contract is launch coverage: the per-stage sums
+    # must cover exactly its own plan's collectives, no dupes/misses.
     import dataclasses as _dc
     fused_plan = exchange.compile_plan(
         grads, _dc.replace(plan.config, overlap=False))
     stage_coll = [plan.stage_collectives(s) for s in plan.schedule.stages]
     stage_hlo = [plan.stage_hlo_collectives(s, workers)
                  for s in plan.schedule.stages]
+    ref_n_collectives = (plan.n_collectives if plan.config.overlap_backward
+                         else fused_plan.n_collectives)
     schedule_info = dict(
         n_stages=plan.schedule.n_stages,
         overlap=plan.config.overlap,
@@ -407,8 +419,7 @@ def audit_exchange_plan(arch: str = "transformer-big", n_workers: int = 8,
         stage_hlo_ops=stage_hlo,
         stage_collectives_sum=sum(stage_coll),
         fused_n_collectives=fused_plan.n_collectives,
-        stage_sum_matches_fused=(sum(stage_coll)
-                                 == fused_plan.n_collectives),
+        stage_sum_matches_fused=(sum(stage_coll) == ref_n_collectives),
     )
     return dict(
         note=note,
@@ -428,6 +439,11 @@ def audit_exchange_plan(arch: str = "transformer-big", n_workers: int = 8,
         codec_state_bytes=plan.state_bytes(),
         hlo_wire_bytes=hlo_wire,
         wire_ratio=(planned_wire / hlo_wire if hlo_wire else None),
+        # cost-model prediction from the SAME per-stage/per-hop
+        # accounting the wire audit above just verified
+        predicted_comm_us=tuning_cost.predict_comm_us(plan, workers,
+                                                      profile),
+        cost_profile=profile_lib.get_profile(profile).name,
         schedule=schedule_info,
         schedule_table=plan.describe_schedule(workers),
         plan_table=plan.describe(),
@@ -440,7 +456,8 @@ def audit_exchange_gspmd(arch: str = "transformer-big", n_workers: int = 8,
                          codec: str = "identity",
                          backend: str = "jax",
                          batch_per_worker: int = 2,
-                         seq_len: int = 32) -> Dict[str, Any]:
+                         seq_len: int = 32,
+                         profile: str = "ib") -> Dict[str, Any]:
     """Planned vs COMPILER-CHOSEN collectives on the GSPMD path.
 
     The shard_map audit checks the collectives we schedule explicitly;
@@ -523,7 +540,43 @@ def audit_exchange_gspmd(arch: str = "transformer-big", n_workers: int = 8,
         planned_wire_bytes=planned_wire,
         hlo_wire_bytes=hlo_wire,
         wire_ratio=(planned_wire / hlo_wire if hlo_wire else None),
+        predicted_comm_us=tuning_cost.predict_comm_us(plan, p, profile),
+        cost_profile=profile_lib.get_profile(profile).name,
         plan_table=plan.describe(),
+    )
+
+
+def run_tune(arch: str = "transformer-big", n_workers: int = 8,
+             reduced: bool = True, profile: str = "ethernet",
+             trials: int = 0, top_k: int = 5,
+             cache_dir: str = search_lib.DEFAULT_CACHE_DIR,
+             batch_per_worker: int = 2,
+             seq_len: int = 32) -> Dict[str, Any]:
+    """Search the ExchangeConfig space for this (model, P, profile) and
+    cache the winner.  ``trials=0`` is purely analytic (no devices
+    beyond plan compilation); ``trials>0`` times the analytic top-k
+    end-to-end on the live (emulated) workers before picking."""
+    _, grads, model, params, batch = _audit_grads(
+        arch, reduced, batch_per_worker, seq_len)
+    if trials > 0:
+        _require_devices(n_workers)
+    res = search_lib.search(grads, n_workers, profile=profile,
+                            trials=trials, top_k=top_k,
+                            model=model, params=params, batch=batch)
+    path = search_lib.save_artifact(res, cache_dir)
+    return dict(
+        arch=arch, reduced=reduced, n_workers=n_workers,
+        profile=res.profile, trials=trials,
+        key=res.key, tree_fingerprint=res.tree_fingerprint,
+        artifact=path,
+        winner=res.winner.label,
+        winner_config=search_lib.config_to_dict(res.winner.config),
+        n_candidates=len(res.candidates),
+        table=res.table(),
+        ranking=[
+            {"label": c.label, "predicted_us": c.predicted_us,
+             "measured_us": c.measured_us, "error": c.error}
+            for c in res.candidates],
     )
 
 
@@ -625,6 +678,23 @@ def main(argv=None) -> int:
     ap.add_argument("--full-size", action="store_true",
                     help="with --audit-exchange: use the full (not "
                          "reduced) config")
+    ap.add_argument("--tune", action="store_true",
+                    help="search the ExchangeConfig space for this "
+                         "model / --audit-workers / --profile, print "
+                         "the ranked table and cache the winner under "
+                         "--tune-cache (consumed by train.py --tuned)")
+    ap.add_argument("--trials", type=int, default=0,
+                    help="with --tune: measured refinement trials for "
+                         "the analytic top-k (0 = analytic only)")
+    ap.add_argument("--top-k", type=int, default=5,
+                    help="with --tune --trials N: how many analytic "
+                         "leaders to measure")
+    from repro.tuning import available_profiles
+    ap.add_argument("--profile", default="ethernet",
+                    help="BandwidthProfile preset name or JSON path "
+                         f"(presets: {', '.join(available_profiles())})")
+    ap.add_argument("--tune-cache", default=search_lib.DEFAULT_CACHE_DIR,
+                    help="tuning artifact directory")
     ap.add_argument("--grad-accum", default="dense_reduce",
                     choices=["sparse_gather", "dense_reduce"])
     ap.add_argument("--fusion-threshold", type=int, default=None)
@@ -647,13 +717,28 @@ def main(argv=None) -> int:
     ap.add_argument("--print-hlo", action="store_true")
     args = ap.parse_args(argv)
 
+    if args.tune:
+        result = run_tune(
+            arch=args.arch, n_workers=args.audit_workers,
+            reduced=not args.full_size, profile=args.profile,
+            trials=args.trials, top_k=args.top_k,
+            cache_dir=args.tune_cache)
+        print(result["table"])
+        print(f"\nwinner: {result['winner']}")
+        print(f"artifact: {result['artifact']}")
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump(result, f, indent=2, default=str)
+        return 0
+
     if args.audit_exchange:
         if args.audit_mode == "gspmd":
             result = audit_exchange_gspmd(
                 arch=args.arch, n_workers=args.audit_workers,
                 reduced=not args.full_size,
                 fusion_threshold=args.fusion_threshold,
-                codec=args.codec, backend=args.backend)
+                codec=args.codec, backend=args.backend,
+                profile=args.profile)
         else:
             result = audit_exchange_plan(
                 arch=args.arch, n_workers=args.audit_workers,
@@ -664,7 +749,8 @@ def main(argv=None) -> int:
                 wire_dtype=args.wire_dtype,
                 codec=args.codec, backend=args.backend,
                 overlap=args.overlap or False,
-                error_feedback=args.error_feedback)
+                error_feedback=args.error_feedback,
+                profile=args.profile)
         print(json.dumps(result, indent=2, default=str))
         if args.out:
             with open(args.out, "w") as f:

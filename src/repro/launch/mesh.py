@@ -23,7 +23,12 @@ def data_axes(mesh) -> tuple:
     return tuple(a for a in mesh.axis_names if a != "model")
 
 
-# Hardware constants for the roofline model (TPU v5e per chip)
-PEAK_FLOPS_BF16 = 197e12        # FLOP/s
-HBM_BW = 819e9                  # B/s
-ICI_BW = 50e9                   # B/s per link
+# Hardware constants for the roofline model (TPU v5e per chip) — read
+# from the shared BandwidthProfile preset so the dry-run roofline, the
+# benchmarks and the tuner can never disagree on the numbers
+from repro.tuning.profile import get_profile as _get_profile
+
+_TPU = _get_profile("tpu")
+PEAK_FLOPS_BF16 = _TPU.peak_flops   # FLOP/s
+HBM_BW = _TPU.hbm_bw                # B/s
+ICI_BW = _TPU.cross_bw              # B/s per link

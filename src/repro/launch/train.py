@@ -40,20 +40,21 @@ from repro.optim import adamw, noam_schedule
 from repro.training import Trainer, TrainerConfig, make_train_step
 
 
-def dist_axes(args):
+def dist_axes(args, backend=None):
     """Mesh axis names for --dist horovod (the hierarchical backend
-    spans two axes: within-pod + cross-pod)."""
+    spans two axes: within-pod + cross-pod).  ``backend`` overrides
+    ``args.backend`` — a ``--tuned`` config decides the mesh shape."""
     if args.dist != "horovod":
         return None
-    return ("pod", "data") if args.backend == "hierarchical" else ("data",)
+    b = backend if backend is not None else args.backend
+    return ("pod", "data") if b == "hierarchical" else ("data",)
 
 
-def build_optimizer(args, cfg) -> DistributedOptimizer:
+def build_optimizer(args, cfg,
+                    exchange: ExchangeConfig = None) -> DistributedOptimizer:
     base = adamw(noam_schedule(cfg.d_model, warmup_steps=args.warmup))
-    axis = dist_axes(args)
-    return DistributedOptimizer(
-        base,
-        exchange=ExchangeConfig(
+    if exchange is None:
+        exchange = ExchangeConfig(
             sparse_as_dense=args.grad_accum == "dense_reduce",
             algorithm=args.algorithm,
             fusion_threshold=args.fusion_threshold,
@@ -63,9 +64,43 @@ def build_optimizer(args, cfg) -> DistributedOptimizer:
             backend=args.backend,
             overlap=args.overlap or False,
             error_feedback=args.error_feedback,
-        ),
-        axis_name=axis,
-    )
+        )
+    axis = dist_axes(args, backend=exchange.backend)
+    return DistributedOptimizer(base, exchange=exchange, axis_name=axis)
+
+
+def resolve_tuned_exchange(args, cfg, model, params,
+                           sparse_embedding: bool,
+                           n_dev: int) -> ExchangeConfig:
+    """--tuned: resolve the cached tuning artifact for this (model,
+    workers, profile) key and return its winning ExchangeConfig.  On a
+    cache miss, warn and fall back to an analytic-only search (saved,
+    so the next launch hits the cache)."""
+    from repro.training.gradients import abstract_grad_contributions
+    from repro.tuning import load_tuned_config, save_artifact
+    from repro.tuning import search as run_search
+
+    pipe = make_pipeline(cfg, batch_per_host=args.batch_per_worker,
+                         seq_len=args.seq_len, seed=args.seed,
+                         task=args.task)
+    b0 = {k: jnp.asarray(v) for k, v in pipe.batch_at(0).items()}
+    g = abstract_grad_contributions(model, params, b0,
+                                    sparse_embedding=sparse_embedding)
+    workers = n_dev if args.dist == "horovod" else 1
+    doc = load_tuned_config(g, workers, args.profile, args.tune_cache)
+    if doc is not None:
+        print(f"tuned exchange: {doc['winner_label']} "
+              f"(artifact {doc['path']})")
+        return doc["exchange_config"]
+    print(f"warning: no tuning artifact for (arch={args.arch}, "
+          f"P={workers}, profile={args.profile}) under {args.tune_cache} "
+          f"— run dryrun --tune; falling back to analytic search",
+          file=sys.stderr)
+    res = run_search(g, workers, profile=args.profile, trials=0)
+    path = save_artifact(res, args.tune_cache)
+    print(f"tuned exchange (analytic, cached -> {path}): "
+          f"{res.winner.label}")
+    return res.winner.config
 
 
 def abstract_worker_grads(args, model, params, pipe,
@@ -94,11 +129,13 @@ def print_exchange_schedule(args, model, params, opt, pipe,
                                   sparse_embedding)
         if args.dist != "horovod":
             workers = 1
-        elif args.backend == "hierarchical":
+        elif opt.exchange_config.backend == "hierarchical":
             workers = (2, n_dev // 2)
         else:
             workers = n_dev
-        print(opt.exchange_stats(g, n_workers=workers).describe())
+        print(opt.exchange_stats(
+            g, n_workers=workers,
+            profile=getattr(args, "profile", "ib")).describe())
     except Exception as e:                       # informational only
         print(f"(exchange schedule unavailable: {e})")
     return g
@@ -162,24 +199,44 @@ def main(argv=None) -> int:
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--task", default="lm", choices=["lm", "translation"])
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--tuned", action="store_true",
+                    help="configure the exchange from the cached "
+                         "autotuner artifact for this (model, workers, "
+                         "--profile) instead of the exchange flags "
+                         "(produce one with dryrun --tune); a cache "
+                         "miss warns and falls back to an analytic "
+                         "search")
+    ap.add_argument("--profile", default="ethernet",
+                    help="BandwidthProfile preset name or JSON path "
+                         "(tuning key + predicted_comm_us estimates)")
+    ap.add_argument("--tune-cache", default=None,
+                    help="tuning artifact directory (default: the "
+                         "repo-wide experiments/tuning)")
     args = ap.parse_args(argv)
+    if args.tune_cache is None:
+        from repro.tuning.search import DEFAULT_CACHE_DIR
+        args.tune_cache = DEFAULT_CACHE_DIR
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
-    opt = build_optimizer(args, cfg)
-    opt_state = opt.init(params)
     # the instrumented sparse path is the whole point in horovod mode
     sparse_embedding = args.dist == "horovod" or \
         args.grad_accum == "sparse_gather"
+    n_dev = len(jax.devices())
+    tuned_exchange = None
+    if args.tuned:
+        tuned_exchange = resolve_tuned_exchange(
+            args, cfg, model, params, sparse_embedding, n_dev)
+    opt = build_optimizer(args, cfg, exchange=tuned_exchange)
+    opt_state = opt.init(params)
     step = make_train_step(model, opt, sparse_embedding=sparse_embedding)
 
-    n_dev = len(jax.devices())
     stateful = step.stateful_exchange
     if args.dist == "horovod":
-        axes = dist_axes(args)
+        axes = dist_axes(args, backend=opt.exchange_config.backend)
         if len(axes) == 2:
             if n_dev % 2:
                 raise SystemExit("hierarchical backend needs an even "
@@ -213,7 +270,9 @@ def main(argv=None) -> int:
                          seq_len=args.seq_len, seed=args.seed,
                          task=args.task)
     g = None
-    if args.overlap or stateful or args.backend == "hierarchical":
+    ex_cfg = opt.exchange_config
+    if ex_cfg.overlap or stateful or args.tuned \
+            or ex_cfg.backend == "hierarchical":
         g = print_exchange_schedule(args, model, params, opt, pipe,
                                     sparse_embedding, n_dev)
     ex_state = None

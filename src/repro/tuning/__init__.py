@@ -1,0 +1,26 @@
+"""repro.tuning — the exchange autotuner.
+
+Searches the ExchangeConfig space (``space``), scores candidates with
+the α–β cost model over the plan's audited per-stage/per-hop accounting
+(``cost``), optionally refines with short measured trials, and caches
+the winner as a versioned JSON artifact keyed by (structural tree
+fingerprint, workers, bandwidth profile) (``search``).  Interconnect
+constants live in ``profile`` — the single source the benchmarks and
+launchers share.
+
+    dryrun --tune [--trials N] [--profile ethernet|ib|tpu]   # search
+    train.py --tuned                                         # consume
+"""
+from repro.tuning.profile import (BandwidthProfile, available_profiles,
+                                  get_profile, PROFILES)
+from repro.tuning.cost import (alpha_beta_time_s, predict_comm_us,
+                               predict_stage_us, roofline_terms,
+                               stage_costs_us)
+from repro.tuning.space import (Candidate, describe_config,
+                                enumerate_space, mesh_levels)
+from repro.tuning.search import (ARTIFACT_VERSION, TuningArtifactError,
+                                 TuningResult, artifact_key,
+                                 artifact_path, config_from_dict,
+                                 config_to_dict, load_artifact,
+                                 load_tuned_config, measure_candidates,
+                                 rank_candidates, save_artifact, search)

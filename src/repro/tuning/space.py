@@ -1,0 +1,135 @@
+"""Enumerate the valid ExchangeConfig space for a (treedef, mesh).
+
+The config space the repo has grown — accumulation algorithm × codec ×
+error feedback × backend (with per-hop requantize) × bucket size ×
+reduce-scatter × overlap mode — crossed and then PRUNED to the combos
+that are actually legal on the given mesh:
+
+  * hierarchical backend (and therefore per-hop requantize) needs a
+    multi-axis mesh — pruned on flat meshes;
+  * ringsim is a single-axis simulation backend — pruned on multi-axis
+    meshes (and excluded from the default deployment space);
+  * reduce-scatter requires a linear, stateless codec and a
+    non-hierarchical backend (``ExchangeConfig.__post_init__``'s own
+    rules — every candidate constructs a real config, so the two rule
+    sets cannot drift: anything the config constructor rejects is
+    dropped);
+  * the sparse-gather algorithm axis is only enumerated when the tree
+    actually has sparse contributions.
+
+``mesh_levels(n_workers)`` gives the folding convention shared by the
+launchers: flat candidates span ``(P,)``, hierarchical candidates the
+``(2, P//2)`` two-pod fold used by ``train.py`` and the dry-run audit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple, Union
+
+from repro.core import codecs as codecs_lib
+from repro.core.exchange import ExchangeConfig, SparseSpec, compile_plan
+from repro.core.fusion import DEFAULT_FUSION_THRESHOLD
+
+#: codec shortlist for the default space: the identity baseline, the
+#: half-width cast, and the quantised wire with/without error feedback.
+#: (every registered codec remains reachable via ``codecs=``)
+DEFAULT_CODECS = ("identity", "bf16", "int8", "int8+ef")
+DEFAULT_OVERLAPS = (False, "staged", "backward")
+DEFAULT_THRESHOLDS = (None, DEFAULT_FUSION_THRESHOLD)
+
+
+@dataclasses.dataclass
+class Candidate:
+    """One point of the space, with its (filled-in) scores."""
+    config: ExchangeConfig
+    levels: Tuple[int, ...]              # mesh fold this config runs on
+    predicted_us: Optional[float] = None
+    measured_us: Optional[float] = None
+    error: Optional[str] = None
+
+    @property
+    def label(self) -> str:
+        return describe_config(self.config)
+
+
+def describe_config(cfg: ExchangeConfig) -> str:
+    """Compact one-cell summary for ranked tables and BENCH rows."""
+    parts = ["dense" if cfg.sparse_as_dense else "gather",
+             cfg.codec, cfg.backend]
+    if cfg.reduce_scatter:
+        parts.append("rs")
+    parts.append(f"ov={cfg.overlap or 'off'}")
+    if cfg.fusion_threshold is not None:
+        parts.append(f"thr={cfg.fusion_threshold // (1024 * 1024)}MiB")
+    return "/".join(parts)
+
+
+def mesh_levels(n_workers: int, hierarchical: bool) -> Tuple[int, ...]:
+    """The launchers' mesh-folding convention: hierarchical exchanges
+    span ``("pod", "data") = (2, P//2)``, flat ones ``(P,)``."""
+    if hierarchical:
+        return (2, n_workers // 2)
+    return (n_workers,)
+
+
+def _tree_has_sparse(grads) -> bool:
+    probe = compile_plan(grads, ExchangeConfig(algorithm="tf_algorithm1"))
+    return any(isinstance(c, SparseSpec)
+               for contribs in probe.contrib_specs for c in contribs)
+
+
+def enumerate_space(grads, n_workers: int, *,
+                    codecs: Sequence[str] = DEFAULT_CODECS,
+                    backends: Optional[Sequence[str]] = None,
+                    overlaps: Sequence[Union[bool, str]] = DEFAULT_OVERLAPS,
+                    thresholds: Sequence[Optional[int]] = DEFAULT_THRESHOLDS,
+                    include_sparse_gather: Optional[bool] = None,
+                    include_reduce_scatter: bool = True
+                    ) -> List[Candidate]:
+    """All valid candidates for this gradient tree on ``n_workers``.
+
+    ``backends=None`` enumerates jax plus (on even multi-worker meshes)
+    hierarchical — the deployment backends; pass an explicit list to
+    include ringsim.  Candidates are pruned by construction: anything
+    ``ExchangeConfig`` itself rejects is dropped, plus the mesh-shape
+    rules above (hierarchical needs a multi-axis fold, ringsim a flat
+    one).
+    """
+    if backends is None:
+        backends = ["jax"]
+        if n_workers >= 4 and n_workers % 2 == 0:
+            backends.append("hierarchical")
+    codecs = [codecs_lib.get_codec(c).name for c in codecs]
+
+    if include_sparse_gather is None:
+        include_sparse_gather = _tree_has_sparse(grads)
+    accum = [True, False] if include_sparse_gather else [True]
+
+    out: List[Candidate] = []
+    for sparse_as_dense in accum:
+        for codec in codecs:
+            for backend in backends:
+                if backend == "hierarchical" and (
+                        n_workers < 4 or n_workers % 2):
+                    continue                 # per-hop needs a real fold
+                rs_choices = [False]
+                if include_reduce_scatter and backend != "hierarchical":
+                    rs_choices.append(True)
+                for rs in rs_choices:
+                    for overlap in overlaps:
+                        for thr in thresholds:
+                            try:
+                                cfg = ExchangeConfig(
+                                    sparse_as_dense=sparse_as_dense,
+                                    fusion_threshold=thr,
+                                    reduce_scatter=rs,
+                                    codec=codec, backend=backend,
+                                    overlap=overlap)
+                            except ValueError:
+                                continue     # illegal combo: pruned
+                            out.append(Candidate(
+                                config=cfg,
+                                levels=mesh_levels(
+                                    n_workers,
+                                    backend == "hierarchical")))
+    return out

@@ -1,0 +1,262 @@
+"""Exchange autotuner: bandwidth profiles, space enumeration/pruning,
+cost-model ordering, stable fingerprints (plan cache + artifact key),
+artifact round-trip/versioning, and the dryrun --tune -> train --tuned
+handoff (subprocess, 8 emulated workers — like test_distributed.py)."""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (DistributedOptimizer, ExchangeConfig,
+                        IndexedSlices, clear_plan_cache, compile_plan,
+                        plan_cache_info)
+from repro.core.exchange import fingerprint
+from repro.optim import adamw
+from repro.tuning import (BandwidthProfile, TuningArtifactError,
+                          available_profiles, enumerate_space,
+                          get_profile, load_artifact, load_tuned_config,
+                          predict_comm_us, save_artifact, search)
+
+jax.config.update("jax_platform_name", "cpu")
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _tree(v=32, d=8, rows=6, scale=1):
+    rng = np.random.default_rng(0)
+
+    def slices():
+        return IndexedSlices(
+            jnp.asarray(rng.integers(0, v, rows, dtype=np.int32)),
+            jnp.asarray(rng.standard_normal((rows, d)), jnp.float32),
+            (v, d))
+    return {
+        "emb": [slices(), slices(), jnp.zeros((v, d), jnp.float32)],
+        "w1": jnp.zeros((64 * scale, 64), jnp.float32),
+        "w2": jnp.zeros((64,), jnp.float32),
+    }
+
+
+# -- profiles ---------------------------------------------------------------
+
+def test_profile_presets_and_overrides(tmp_path):
+    assert set(available_profiles()) >= {"ethernet", "ib", "tpu", "cpu"}
+    ib = get_profile("ib")
+    assert ib.cross_bw == 12.5e9          # the paper cluster's 100 Gb/s
+    # instance passthrough and JSON override (any field subset)
+    assert get_profile(ib) is ib
+    p = tmp_path / "lab.json"
+    p.write_text(json.dumps({"name": "lab", "cross_bw": 1e9}))
+    lab = get_profile(str(p))
+    assert lab.name == "lab" and lab.cross_bw == 1e9
+    with pytest.raises(ValueError, match="unknown bandwidth profile"):
+        get_profile("warp-drive")
+    with pytest.raises(ValueError, match="unknown BandwidthProfile"):
+        BandwidthProfile.from_dict({"name": "x", "warp": 9})
+
+
+def test_profile_level_terms():
+    eth = get_profile("ethernet")
+    # flat collectives pay the slow cross links; only the innermost
+    # level of a multi-level mesh gets the fast local ones
+    assert eth.level_bandwidth(0, 1) == eth.cross_bw
+    assert eth.level_bandwidth(0, 2) == eth.cross_bw
+    assert eth.level_bandwidth(1, 2) == eth.local_bw
+    assert eth.level_alpha(1, 2) == eth.local_alpha
+
+
+# -- space enumeration ------------------------------------------------------
+
+def test_space_prunes_illegal_combos():
+    cands = enumerate_space(_tree(), 8)
+    assert cands
+    cfgs = [c.config for c in cands]
+    # hierarchical appears on the (2,4) fold...
+    assert any(c.backend == "hierarchical" for c in cfgs)
+    for c in cfgs:
+        # ...but never combined with reduce-scatter, and rs never with
+        # a non-linear codec (ExchangeConfig's own legality rules)
+        assert not (c.reduce_scatter and c.backend == "hierarchical")
+        assert not (c.reduce_scatter and not c.codec_obj.linear)
+    # every candidate's mesh fold matches its backend
+    for c in cands:
+        assert c.levels == ((2, 4) if c.config.backend == "hierarchical"
+                            else (8,))
+
+
+def test_space_flat_mesh_and_dense_tree():
+    # 2 workers cannot fold into (2, 1) pods: no hierarchical candidates
+    assert all(c.config.backend != "hierarchical"
+               for c in enumerate_space(_tree(), 2))
+    # a tree with no sparse contributions never enumerates the gather
+    # algorithm axis
+    dense = {"w": jnp.zeros((16, 16), jnp.float32)}
+    assert all(c.config.sparse_as_dense
+               for c in enumerate_space(dense, 8))
+
+
+# -- cost model -------------------------------------------------------------
+
+def test_cost_monotonic_in_bytes_and_codec():
+    cfg = ExchangeConfig(sparse_as_dense=True)
+    small = compile_plan(_tree(scale=1), cfg)
+    big = compile_plan(_tree(scale=8), cfg)
+    assert predict_comm_us(big, 8, "ethernet") > \
+        predict_comm_us(small, 8, "ethernet")
+    # halving the wire must win on a bandwidth-starved profile
+    bf16 = compile_plan(_tree(scale=8),
+                        ExchangeConfig(sparse_as_dense=True, codec="bf16"))
+    assert predict_comm_us(bf16, 8, "ethernet") < \
+        predict_comm_us(big, 8, "ethernet")
+
+
+def test_hierarchical_beats_flat_when_model_says_so():
+    """On ethernet (fast local / slow cross links) the hierarchical
+    Σ(p_k−1) exchange must out-predict the flat (P−1) one — the
+    ordering the tuner exists to discover."""
+    tree = _tree(scale=8)
+    flat = compile_plan(tree, ExchangeConfig(sparse_as_dense=True,
+                                             codec="int8"))
+    hier = compile_plan(tree, ExchangeConfig(sparse_as_dense=True,
+                                             codec="int8",
+                                             backend="hierarchical"))
+    assert predict_comm_us(hier, (2, 4), "ethernet") < \
+        predict_comm_us(flat, 8, "ethernet")
+    # on uniform TPU ICI the asymmetry vanishes and flat must NOT lose
+    # to the extra hierarchical hop
+    assert predict_comm_us(flat, 8, "tpu") <= \
+        predict_comm_us(hier, (2, 4), "tpu")
+
+
+def test_exchange_stats_carries_prediction():
+    opt = DistributedOptimizer(adamw(1e-3),
+                               exchange=ExchangeConfig(
+                                   sparse_as_dense=True))
+    stats = opt.exchange_stats(_tree(), 8, profile="ethernet")
+    assert stats.predicted_comm_us > 0
+    assert stats.cost_profile == "ethernet"
+    assert "predicted_comm_us" in stats.describe()
+
+
+# -- fingerprints -----------------------------------------------------------
+
+def test_fingerprint_structural_vs_exact():
+    a, b = _tree(rows=6), _tree(rows=9)
+    assert fingerprint(a) != fingerprint(b)            # exact: rows count
+    assert fingerprint(a, exact=False) == fingerprint(b, exact=False)
+    assert fingerprint(a) == fingerprint(_tree(rows=6))
+
+
+def test_plan_cache_hits_reconstructed_tree():
+    """Two structurally-equal trees built independently must share one
+    cache entry (the fingerprint key fixes the old treedef-identity
+    miss)."""
+    clear_plan_cache()
+    cfg = ExchangeConfig(sparse_as_dense=True)
+    p1 = compile_plan(_tree(), cfg)
+    p2 = compile_plan(_tree(), cfg)
+    assert p1 is p2
+    info = plan_cache_info()
+    assert info["hits"] >= 1 and info["misses"] == 1
+
+
+def test_fingerprint_stable_across_process_restarts():
+    code = (
+        "import jax.numpy as jnp, numpy as np\n"
+        "from repro.core import IndexedSlices\n"
+        "from repro.core.exchange import fingerprint\n"
+        "s = IndexedSlices(jnp.zeros(4, jnp.int32),\n"
+        "                  jnp.zeros((4, 8), jnp.float32), (32, 8))\n"
+        "t = {'e': [s, jnp.zeros((32, 8), jnp.float32)],\n"
+        "     'w': jnp.zeros((16,), jnp.float32)}\n"
+        "print(fingerprint(t), fingerprint(t, exact=False))\n")
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    outs = [subprocess.run([sys.executable, "-c", code], env=env,
+                           capture_output=True, text=True, timeout=560)
+            for _ in range(2)]
+    for o in outs:
+        assert o.returncode == 0, o.stderr[-2000:]
+    assert outs[0].stdout == outs[1].stdout
+
+
+# -- artifacts --------------------------------------------------------------
+
+def _toy_search():
+    return search(_tree(), 8, profile="ethernet", trials=0,
+                  codecs=("identity", "int8"), thresholds=(None,),
+                  include_reduce_scatter=False)
+
+
+def test_artifact_roundtrip(tmp_path):
+    res = _toy_search()
+    path = save_artifact(res, str(tmp_path))
+    doc = load_artifact(path)
+    assert doc["winner_label"] == res.winner.label
+    hit = load_tuned_config(_tree(), 8, "ethernet", str(tmp_path))
+    assert hit is not None
+    assert hit["exchange_config"] == res.winner.config
+    # a different key (worker count) is a clean miss, not an error
+    assert load_tuned_config(_tree(), 4, "ethernet", str(tmp_path)) is None
+
+
+def test_artifact_stale_version_rejected(tmp_path):
+    res = _toy_search()
+    path = save_artifact(res, str(tmp_path))
+    doc = json.loads(open(path).read())
+    doc["version"] = 999
+    with open(path, "w") as f:
+        json.dump(doc, f)
+    with pytest.raises(TuningArtifactError, match="stale"):
+        load_artifact(path)
+    # the consuming loader degrades to a miss (analytic fallback)
+    assert load_tuned_config(_tree(), 8, "ethernet", str(tmp_path)) is None
+
+
+def test_search_winner_and_tiebreak():
+    res = _toy_search()
+    # ranked ascending by predicted cost; ties split by overlap
+    # preference (hiding the same bytes earlier never loses)
+    pred = [c.predicted_us for c in res.candidates]
+    assert pred == sorted(pred)
+    assert res.winner is res.candidates[0]
+    assert res.table().count("|") > 10
+
+
+# -- the dryrun --tune -> train --tuned handoff -----------------------------
+
+def test_tune_then_tuned_training_e2e(tmp_path):
+    """dryrun --tune writes the artifact; train.py --tuned starts from
+    it (no fallback warning) on 8 emulated workers, across DIFFERENT
+    batch shapes — the structural-fingerprint contract."""
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=os.path.join(REPO, "src"))
+    cache = str(tmp_path / "tuning")
+    tune = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "transformer-big", "--tune", "--trials", "0",
+         "--profile", "ethernet", "--tune-cache", cache,
+         "--audit-workers", "8"],
+        env=env, capture_output=True, text=True, timeout=560)
+    assert tune.returncode == 0, tune.stderr[-4000:]
+    assert "winner:" in tune.stdout
+    assert os.listdir(cache)
+
+    train = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train",
+         "--arch", "transformer-big", "--reduced", "--dist", "horovod",
+         "--steps", "1", "--log-every", "1", "--batch-per-worker", "2",
+         "--seq-len", "32", "--tuned", "--profile", "ethernet",
+         "--tune-cache", cache],
+        env=env, capture_output=True, text=True, timeout=560)
+    assert train.returncode == 0, train.stderr[-4000:]
+    assert "tuned exchange:" in train.stdout
+    assert "falling back" not in train.stderr
+    assert "predicted_comm_us" in train.stdout
+    assert "done:" in train.stdout
