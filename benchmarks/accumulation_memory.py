@@ -84,3 +84,27 @@ def run(emit):
     emit("fig3_vs_paper_dense", 0.0,
          f"{dense_b/1e6:.1f}MB_vs_{PAPER_DENSE_MB}MB_"
          f"dev{abs(dense_b/1e6-PAPER_DENSE_MB)/PAPER_DENSE_MB*100:.1f}%")
+
+    # per-worker OPTIMIZER-state memory on the same dense layout:
+    # replicated AdamW (fp32 mu/nu everywhere) vs ZeRO-1 1/P flat EMA
+    # shards vs ZeRO-1 with bf16 EMA storage (adamw(state_dtype=...))
+    from repro.optim.zero1 import optimizer_state_bytes
+
+    plan_z1 = compile_plan(tree, ExchangeConfig(sparse_as_dense=True,
+                                                zero1=True))
+    p = 8
+    repl = optimizer_state_bytes(plan_z1, p, "float32", zero1=False)
+    z1_f32 = optimizer_state_bytes(plan_z1, p, "float32")
+    z1_bf16 = optimizer_state_bytes(plan_z1, p, "bfloat16")
+    emit(f"optstate_replicated_fp32_P{p}", 0.0, f"{repl/1e6:.1f}MB")
+    emit(f"optstate_zero1_P{p}", 0.0,
+         f"{z1_f32/1e6:.1f}MB_{repl/z1_f32:.1f}x_cut")
+    emit(f"optstate_zero1_bf16_P{p}", 0.0,
+         f"{z1_bf16/1e6:.1f}MB_{repl/z1_bf16:.1f}x_cut")
+    # the acceptance bound: the zero1 shard is 1/P of replicated, plus
+    # only per-bucket padding slack (< P elements per dense stage) and
+    # the shared step counter
+    n_dense = sum(1 for s in plan_z1.schedule.stages if s.kind == "dense")
+    slack = n_dense * p * 8 + 8                    # pad elems * fp32 EMA
+    assert z1_f32 <= repl / p + slack, (z1_f32, repl, slack)
+    assert z1_bf16 <= repl / p / 2 + slack, (z1_bf16, repl, slack)

@@ -34,9 +34,9 @@ STEPS = 120
 
 def _train(cfg, model, params, sad: bool, batch: int, steps=STEPS,
            lr=1e-2, codec: str = "identity", error_feedback: bool = False,
-           fusion_threshold=None):
+           fusion_threshold=None, state_dtype: str = "float32"):
     opt = DistributedOptimizer(
-        adamw(lr), exchange=ExchangeConfig(
+        adamw(lr, state_dtype=state_dtype), exchange=ExchangeConfig(
             sparse_as_dense=sad, codec=codec,
             error_feedback=error_feedback,
             fusion_threshold=fusion_threshold))
@@ -109,3 +109,15 @@ def run(emit):
     emit("ef_gap_closure", 0.0,
          f"gap{gap:.4f}_closure{closure:.2f}_"
          f"{'PASS' if closure >= 0.5 else 'FAIL'}")
+
+    # (d) quantised OPTIMIZER STATE: adamw(state_dtype="bfloat16")
+    # halves the mu/nu storage (the ZeRO-1 memory row's bf16 variant);
+    # the update math still runs in f32 after upcasting, so the final
+    # loss must stay within the run-to-run noise floor of fp32 state
+    loss_bf16, _ = _train(cfg, model, params, sad=True, batch=8,
+                          state_dtype="bfloat16")
+    state_gap = abs(loss_bf16 - loss_r)
+    emit("optstate_bf16_final_loss", 0.0, f"{loss_bf16:.4f}")
+    emit("optstate_bf16_invariance", 0.0,
+         f"gap{state_gap:.4f}_vs_floor{noise_floor}_"
+         f"{'PASS' if state_gap <= noise_floor else 'FAIL'}")

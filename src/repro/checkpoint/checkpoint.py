@@ -76,8 +76,15 @@ def restore_checkpoint(directory: str, like: Any,
         if key.endswith(BF16_SUFFIX):
             arr = arr.view(np.dtype(jax.numpy.bfloat16))
         if arr.shape != np.shape(leaf):
+            hint = ""
+            if "param_shards" in key or "opt_slots" in key:
+                # Zero1State leaves are 1/P mesh-partitioned flat shards
+                hint = (" — this looks like a ZeRO-1 shard: zero1 "
+                        "optimizer state is partitioned by mesh size, "
+                        "so a checkpoint only resumes on the worker "
+                        "count it was saved with")
             raise ValueError(f"shape mismatch at {key}: "
-                             f"{arr.shape} vs {np.shape(leaf)}")
+                             f"{arr.shape} vs {np.shape(leaf)}{hint}")
         new_leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
     return jax.tree_util.tree_unflatten(treedef, new_leaves), step
 

@@ -151,6 +151,13 @@ class CollectiveBackend:
         """Collective ops lowered per dense bucket."""
         raise NotImplementedError
 
+    def hlo_ops_reduce_scatter(self, levels: Sequence[int]) -> int:
+        """Collective ops lowered by one BARE grad reduce-scatter — the
+        ZeRO-1 grad half.  Unlike the RS+AG decomposition there is no
+        trailing grad allgather: the updated PARAMS ride back instead,
+        billed separately as ``hlo_ops_gather`` of the param tensors."""
+        raise NotImplementedError
+
     def hlo_ops_gather(self, n_tensors: int, levels: Sequence[int]) -> int:
         """Collective ops lowered per sparse gather bucket exchanging
         ``n_tensors`` arrays (indices + values [+ scales])."""
@@ -228,6 +235,9 @@ class JaxCollectives(CollectiveBackend):
             return 2 * len(levels)
         return {ALLREDUCE: 1, REDUCE_SCATTER: 1 + len(levels)}[kind]
 
+    def hlo_ops_reduce_scatter(self, levels):
+        return 1                           # one flat psum_scatter
+
     def hlo_ops_gather(self, n_tensors, levels):
         return n_tensors * len(levels)     # one all-gather per axis each
 
@@ -249,6 +259,10 @@ class HierarchicalBackend(JaxCollectives):
         raise ValueError("hierarchical backend does not implement "
                          "reduce_scatter; use backend='jax' (flat "
                          "psum_scatter) for the RS+AG decomposition")
+
+    def hlo_ops_reduce_scatter(self, levels):
+        raise ValueError("hierarchical backend has no reduce-scatter "
+                         "path")
 
     def allreduce_wire_bytes(self, n_elems, wire_dtype, levels):
         return comm.hierarchical_allreduce_wire_bytes(
@@ -428,6 +442,9 @@ class RingSimBackend(CollectiveBackend):
         if not codec.linear:
             return 2 * max(p - 1, 0)       # ring gathers: values + scales
         return 2 * max(p - 1, 0)           # RS hops + AG hops
+
+    def hlo_ops_reduce_scatter(self, levels):
+        return max(_prod(levels) - 1, 0)   # the ring's P-1 RS hops
 
     def hlo_ops_gather(self, n_tensors, levels):
         return n_tensors * max(_prod(levels) - 1, 0)

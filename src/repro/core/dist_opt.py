@@ -69,6 +69,11 @@ class ExchangeStats:
     hop_wire_bytes: tuple = ()   # per-mesh-level wire (hierarchical runs)
     predicted_comm_us: float = 0.0   # cost-model estimate (repro.tuning)
     cost_profile: str = ""       # BandwidthProfile the estimate used
+    param_bytes: int = 0         # per-worker model params (replicated)
+    grad_bytes: int = 0          # per-worker gradient tree
+    opt_state_bytes: int = 0     # per-worker optimizer state (EMA + step;
+    #                              1/P flat shards + f32 master under zero1)
+    zero1: bool = False          # optimizer state sharded over the mesh?
 
     def describe(self) -> str:
         """One-look summary of what the exchange will actually run:
@@ -86,6 +91,12 @@ class ExchangeStats:
         if self.cost_profile:
             head += (f" predicted_comm_us={self.predicted_comm_us:.1f} "
                      f"(profile={self.cost_profile})")
+        if self.param_bytes or self.opt_state_bytes:
+            opt_tag = "zero1-sharded" if self.zero1 else "replicated"
+            head += (f"\nmemory/worker: params={self.param_bytes} B "
+                     f"grads={self.grad_bytes} B "
+                     f"opt_state={self.opt_state_bytes} B ({opt_tag}) "
+                     f"codec_state={self.state_bytes} B")
         if self.state_bytes:
             per = ",".join(str(b) for b in self.state_bytes_per_bucket)
             head += (f"\ncodec state: {self.state_bytes} B/worker "
@@ -212,6 +223,38 @@ class DistributedOptimizer:
         plan's bucketing — serving-side weight hot-swap."""
         return self.plan(tree).broadcast(tree, self.axis_name, root=root)
 
+    # -- ZeRO-1: sharded optimizer state (exchange fused with update) --------
+    @property
+    def zero1(self) -> bool:
+        """True when the exchange config shards optimizer state — the
+        step must then go through ``zero1_step``, not exchange+update."""
+        return self._exchange_config.zero1
+
+    def init_zero1_state(self, grads, params, n_workers: int = 1):
+        """GLOBAL Zero1State (f32 master-param shards + flat EMA
+        buffers in bucket slot order) for this tree structure.  Under
+        ``shard_map`` pass ``n_workers`` and partition dense-stage
+        leaves over dim 0 (``repro.optim.zero1.state_specs``)."""
+        # lazy import: repro.optim.zero1 consumes repro.core.exchange,
+        # not the other way round at import time
+        from repro.optim import zero1 as zero1_lib
+        return zero1_lib.init_state(self.plan(grads), self.base, params,
+                                    n_workers=n_workers)
+
+    def zero1_step(self, grads, params, z_state,
+                   exchange_state: Optional[ExchangeState] = None):
+        """One fused ZeRO-1 step: bucket-scheduled grad reduce-scatter,
+        flat-shard optimizer update on this worker's 1/P slice, and the
+        updated-param allgather back through the same schedule.
+        Returns ``(new_params, new_z_state, new_exchange_state)``
+        (``new_exchange_state`` is ``None`` when ``exchange_state``
+        is)."""
+        from repro.optim import zero1 as zero1_lib
+        return zero1_lib.zero1_step(self.plan(grads), self.base, grads,
+                                    params, z_state, self.axis_name,
+                                    average=self.average,
+                                    ex_state=exchange_state)
+
     # -- static accounting (no devices needed) -------------------------------
     def exchange_stats(self, grads, n_workers: Union[int, tuple],
                        profile: str = "ib") -> ExchangeStats:
@@ -235,6 +278,10 @@ class DistributedOptimizer:
                     else f"{cfg.algorithm}")
         if cfg.reduce_scatter:
             strategy += "+reduce_scatter"
+        if cfg.zero1:
+            strategy += "+zero1"
+            if cfg.param_codec != "identity":
+                strategy += f"+param_codec:{cfg.param_codec}"
         if cfg.codec != "identity":
             strategy += f"+codec:{cfg.codec}"
         if cfg.backend != "jax":
@@ -242,6 +289,10 @@ class DistributedOptimizer:
         if cfg.overlap:
             strategy += ("+overlap" if cfg.overlap == "staged"
                          else f"+overlap:{cfg.overlap}")
+        from repro.optim import zero1 as zero1_lib   # lazy (see above)
+        opt_state_bytes = zero1_lib.optimizer_state_bytes(
+            plan, n_workers,
+            state_dtype=getattr(self.base, "state_dtype", "float32"))
         return ExchangeStats(
             accumulated_bytes=plan.buffer_bytes(n_workers),
             wire_bytes=plan.wire_bytes(n_workers),
@@ -254,4 +305,8 @@ class DistributedOptimizer:
             state_bytes_per_bucket=plan.state_bytes_per_stage(),
             hop_wire_bytes=plan.hop_wire_bytes(n_workers),
             predicted_comm_us=predicted_us,
-            cost_profile=profile_name)
+            cost_profile=profile_name,
+            param_bytes=plan.param_bytes(),
+            grad_bytes=plan.param_bytes(),
+            opt_state_bytes=opt_state_bytes,
+            zero1=cfg.zero1)

@@ -103,6 +103,18 @@ class ExchangeConfig:
     #                                      wait_free_grad_exchange)
     error_feedback: bool = False         # wrap codec in ErrorFeedbackCodec
     #                                      (normalised onto codec="<x>+ef")
+    zero1: bool = False                  # ZeRO-1: reduce-scatter grads,
+    #                                      run the optimizer update on the
+    #                                      1/P flat shard, allgather the
+    #                                      UPDATED PARAMS back through the
+    #                                      same BucketSchedule.  The first
+    #                                      strategy where the exchange and
+    #                                      the optimizer update are one
+    #                                      fused schedule (see docs/zero.md)
+    param_codec: str = "identity"        # WireCodec for the zero1 param
+    #                                      allgather wire (stateless only;
+    #                                      "identity" keeps zero1 bitwise-
+    #                                      identical to the replicated path)
     # -- deprecated spellings, folded into codec/backend ---------------------
     wire_dtype: Optional[str] = None     # -> codec=<cast codec>
     hierarchical: bool = False           # -> backend="hierarchical"
@@ -161,10 +173,44 @@ class ExchangeConfig:
             if self.backend == "hierarchical":
                 raise ValueError("hierarchical backend has no RS+AG path; "
                                  "use backend='jax' or 'ringsim'")
+        # resolve + normalise the zero1 param-allgather codec
+        object.__setattr__(self, "param_codec",
+                           codecs.get_codec(self.param_codec).name)
+        if self.zero1:
+            if self.reduce_scatter:
+                raise ValueError(
+                    "zero1 subsumes reduce_scatter: the grad "
+                    "reduce-scatter and the updated-param allgather ARE "
+                    "the RS+AG decomposition with the optimizer update "
+                    "in between — drop reduce_scatter=True")
+            if self.backend == "hierarchical":
+                raise ValueError("hierarchical backend has no "
+                                 "reduce-scatter path; zero1 needs "
+                                 "backend='jax' or 'ringsim'")
+            if self.overlap == "backward":
+                raise ValueError(
+                    "zero1 does not compose with overlap='backward': the "
+                    "updated-param allgather needs the sharded optimizer "
+                    "update, which runs AFTER the backward pass — use "
+                    "overlap='staged' (grad reduce-scatters still launch "
+                    "before any param allgather)")
+            if self.param_codec_obj.stateful:
+                raise ValueError(
+                    f"param_codec {self.param_codec!r} is stateful; the "
+                    f"param allgather broadcasts state (the updated "
+                    f"params), so error-feedback residuals would "
+                    f"double-apply — use a stateless codec")
+        elif self.param_codec != "identity":
+            raise ValueError("param_codec configures the zero1 param "
+                             "allgather; set zero1=True")
 
     @property
     def codec_obj(self) -> codecs.WireCodec:
         return codecs.get_codec(self.codec)
+
+    @property
+    def param_codec_obj(self) -> codecs.WireCodec:
+        return codecs.get_codec(self.param_codec)
 
     @property
     def backend_obj(self) -> backend_lib.CollectiveBackend:
@@ -181,7 +227,9 @@ class ExchangeConfig:
 
     @property
     def dense_collective(self) -> str:
-        return REDUCE_SCATTER if self.reduce_scatter else ALLREDUCE
+        if self.zero1 or self.reduce_scatter:
+            return REDUCE_SCATTER
+        return ALLREDUCE
 
 
 # ---------------------------------------------------------------------------
@@ -425,8 +473,43 @@ class ExchangePlan:
         return sum(self.stage_collectives(s) for s in self.schedule.stages)
 
     # -- per-stage accounting (the BucketSchedule contract) ------------------
+    @property
+    def _zero1_param_tensors(self) -> int:
+        """Tensors the zero1 param allgather moves per dense stage:
+        the encoded shard, plus per-worker scales for sided codecs."""
+        return 1 + (0 if self.config.param_codec_obj.linear else 1)
+
+    def zero1_shard_elems(self, stage: BucketStage,
+                          n_workers: Union[int, Sequence[int]]) -> int:
+        """Per-worker flat shard length of one dense stage's bucket
+        under ZeRO-1 (bucket elements padded to a multiple of P) — the
+        slice of (params, EMA buffers) this worker owns and updates."""
+        p = math.prod(self._levels(n_workers))
+        b = self.dense_buckets[stage.bucket_id]
+        return codecs.padded_elems(b.n_elems, p) // p
+
+    def _zero1_param_hop_wire_bytes(self, stage: BucketStage,
+                                    n_workers: Union[int, Sequence[int]]
+                                    ) -> Tuple[int, ...]:
+        """Per-hop wire bytes of one dense stage's updated-param
+        allgather: every worker receives the other P-1 encoded shards
+        (+ their scales), i.e. (P-1)/P of the padded bucket in the
+        param codec's wire dtype."""
+        levels = self._levels(n_workers)
+        if math.prod(levels) <= 1:
+            return tuple(0 for _ in levels)
+        payload = self.config.param_codec_obj.wire_bytes(
+            self.zero1_shard_elems(stage, n_workers), "float32")
+        return self.config.backend_obj.gather_hop_wire_bytes(payload,
+                                                             levels)
+
     def stage_collectives(self, stage: BucketStage) -> int:
         """Logical collectives one stage launches (P-independent)."""
+        if stage.kind == "dense" and self.config.zero1:
+            # grad half (RS for linear wires, values+scales gather for
+            # quantised ones) + the updated-param allgather half
+            grad = 1 if self.config.codec_obj.linear else 2
+            return grad + self._zero1_param_tensors
         if not self.config.codec_obj.linear:
             # non-linear codecs never reduce in flight: every bucket is
             # one values allgather + one scales allgather, whatever its
@@ -461,6 +544,21 @@ class ExchangePlan:
         be = self.config.backend_obj
         if stage.kind == "dense":
             b = self.dense_buckets[stage.bucket_id]
+            if self.config.zero1:
+                codec = self.config.codec_obj
+                if codec.linear:
+                    p = math.prod(levels)
+                    grad = (int(comm.reduce_scatter_wire_bytes(
+                        b.n_elems, b.wire_dtype, p)) if p > 1 else 0,)
+                else:
+                    # quantised grads still move as the replicated
+                    # path's (values, scales) allgather — the shard is
+                    # sliced AFTER decode-sum, so the wire is unchanged
+                    grad = be.dense_hop_wire_bytes(
+                        b.collective, b.n_elems, b.wire_dtype, codec,
+                        levels)
+                param = self._zero1_param_hop_wire_bytes(stage, n_workers)
+                return tuple(g + q for g, q in zip(grad, param))
             return be.dense_hop_wire_bytes(b.collective, b.n_elems,
                                            b.wire_dtype,
                                            self.config.codec_obj, levels)
@@ -475,9 +573,13 @@ class ExchangePlan:
         be = self.config.backend_obj
         codec = self.config.codec_obj
         if stage.kind == "dense":
-            return be.hlo_ops_dense(
-                self.dense_buckets[stage.bucket_id].collective, codec,
-                levels)
+            b = self.dense_buckets[stage.bucket_id]
+            if self.config.zero1:
+                grad = (be.hlo_ops_reduce_scatter(levels) if codec.linear
+                        else be.hlo_ops_dense(b.collective, codec, levels))
+                return grad + be.hlo_ops_gather(self._zero1_param_tensors,
+                                                levels)
+            return be.hlo_ops_dense(b.collective, codec, levels)
         n_tensors = 2 + (0 if codec.linear else 1)
         return be.hlo_ops_gather(n_tensors, levels)
 
@@ -492,9 +594,15 @@ class ExchangePlan:
         be = self.config.backend_obj
         codec = self.config.codec_obj
         if stage.kind == "dense":
-            return be.dense_hop_ops(
-                self.dense_buckets[stage.bucket_id].collective, codec,
-                levels)
+            b = self.dense_buckets[stage.bucket_id]
+            if self.config.zero1:
+                grad = ((be.hlo_ops_reduce_scatter(levels),)
+                        if codec.linear
+                        else be.dense_hop_ops(b.collective, codec, levels))
+                param = be.gather_hop_ops(self._zero1_param_tensors,
+                                          levels)
+                return tuple(g + q for g, q in zip(grad, param))
+            return be.dense_hop_ops(b.collective, codec, levels)
         n_tensors = 2 + (0 if codec.linear else 1)
         return be.gather_hop_ops(n_tensors, levels)
 
@@ -557,8 +665,18 @@ class ExchangePlan:
         wire = result = 0.0
         for s in self.schedule.stages:
             if s.kind == "dense" and codec.linear:
-                continue                   # psum / RS+AG, not a pure gather
-            hops = self.stage_hop_wire_bytes(s, n_workers)
+                if not self.config.zero1:
+                    continue               # psum / RS+AG, not a pure gather
+                # zero1 + linear wire: the stage's only all-gather hop
+                # is the updated-param broadcast (the grad half is a
+                # bare reduce-scatter)
+                hops = self._zero1_param_hop_wire_bytes(s, n_workers)
+            else:
+                # gather stages and quantised dense stages; under zero1
+                # the latter's hop bytes already include the param
+                # allgather — every hop is a pure gather at the same
+                # per-level factor, so the mix stays exact
+                hops = self.stage_hop_wire_bytes(s, n_workers)
             for wk, pk in zip(hops, levels):
                 if pk > 1:
                     wire += wk
@@ -590,6 +708,17 @@ class ExchangePlan:
         return sum(comm.dense_buffer_bytes(self.leaf_specs[i].shape,
                                            self.leaf_specs[i].dtype)
                    for i in self.dense_leaf_ids)
+
+    def param_bytes(self) -> int:
+        """Per-worker parameter memory (params are replicated under
+        every strategy, zero1 included — only the MASTER copy shards):
+        every leaf's dense shape at its native dtype.  Sparse grad
+        leaves still correspond to dense param tensors."""
+        total = 0
+        for s in self.leaf_specs:
+            shape = s.shape if isinstance(s, DenseSpec) else s.dense_shape
+            total += math.prod(shape) * comm.dtype_bytes(s.dtype)
+        return total
 
     @property
     def sparse_bytes_per_worker(self) -> int:
@@ -970,6 +1099,15 @@ class ExchangePlan:
                 out[k] += b
         return tuple(out)
 
+    def _check_not_zero1(self) -> None:
+        if self.config.zero1:
+            raise ValueError(
+                "zero1 plans fuse the exchange with the optimizer "
+                "update (grad reduce-scatter -> shard update -> param "
+                "allgather); there is no grads-only execute path — "
+                "drive the plan through DistributedOptimizer.zero1_step "
+                "(see docs/zero.md)")
+
     def _check_state(self, state) -> Optional[ExchangeState]:
         codec = self.config.codec_obj
         if state is None:
@@ -1026,6 +1164,7 @@ class ExchangePlan:
                       state: Optional[ExchangeState] = None):
         """Serial reference path: each stage is accumulated, launched,
         and finished before the next stage starts."""
+        self._check_not_zero1()
         state = self._check_state(state)
         raw, axes, p, inv_scale = self._exchange_setup(grads, axis_name,
                                                        average)
@@ -1053,6 +1192,7 @@ class ExchangePlan:
         collective has been issued.  XLA's latency-hiding scheduler can
         then hide stage k's collective behind stage k+1's
         densify/pack compute."""
+        self._check_not_zero1()
         state = self._check_state(state)
         raw, axes, p, inv_scale = self._exchange_setup(grads, axis_name,
                                                        average)
@@ -1105,6 +1245,92 @@ class ExchangePlan:
                 buf = codec.decode(wire, scale, jnp.float32)
             self.unpack_bucket(bucket, buf, out, None)
         return jax.tree_util.tree_unflatten(self.treedef, out)
+
+    # -- ZeRO-1 execution (the fused exchange+update schedule) ---------------
+    @staticmethod
+    def _flat_worker_index(axes: Tuple[str, ...]):
+        """This worker's flat rank over the mesh axes (the dim-0 chunk
+        order of tiled reduce_scatter / all_gather)."""
+        flat = None
+        for a in axes:
+            idx = jax.lax.axis_index(a)
+            flat = idx if flat is None else flat * comm.axis_size(a) + idx
+        return flat
+
+    def zero1_grad_shard(self, stage: BucketStage, leaves: List[Any],
+                         axes: Tuple[str, ...], p: int, bstate
+                         ) -> Tuple[jax.Array, Any]:
+        """Reduce one dense stage's packed grads down to this worker's
+        flat f32 shard (``zero1_shard_elems`` long, zero-padded tail).
+        Linear codecs reduce-scatter the wire — no grad allgather ever
+        happens; the updated params ride back instead.  Non-linear
+        codecs run the replicated path's (values, scales) allgather +
+        decode-sum and slice this worker's shard of the full sum, so
+        gradients (and error-feedback residuals) match the replicated
+        path bit for bit.  Returns ``(shard, new codec state)``."""
+        bucket = self.dense_buckets[stage.bucket_id]
+        codec = self.config.codec_obj
+        be = self.config.backend_obj
+        shard_elems = self.zero1_shard_elems(stage, p)
+        buf = self.pack_bucket(bucket, leaves)
+        if codec.linear:
+            if codec.stateful:
+                # e.g. bf16+ef: the compensated wire still sums in flight
+                buf, scale, bstate = codec.encode_stateful(
+                    buf, bstate, use_kernel=self.config.use_kernel)
+                if scale is not None:
+                    raise ValueError(
+                        f"linear codec {codec.name!r} returned side "
+                        f"scales; scales cannot be reduce-scattered")
+            pad = shard_elems * p - bucket.n_elems
+            if pad:
+                buf = jnp.pad(buf, (0, pad))
+            shard = be.reduce_scatter(buf, axes) if axes else buf
+            return shard.astype(jnp.float32), bstate
+        # non-linear: decode-sum the full bucket, then slice own shard
+        wire, scale, bstate = codec.encode_stateful(
+            buf, bstate, use_kernel=self.config.use_kernel)
+        if not axes:
+            red = codec.decode(wire, scale, jnp.float32)
+        else:
+            red = codecs.sum_decoded(codec, be.all_gather(wire, axes),
+                                     be.all_gather(scale, axes), p,
+                                     jnp.float32)
+        pad = shard_elems * p - bucket.n_elems
+        if pad:
+            red = jnp.pad(red, (0, pad))
+        if not axes:
+            return red, bstate            # p == 1: the shard IS the bucket
+        start = self._flat_worker_index(axes) * shard_elems
+        return jax.lax.dynamic_slice_in_dim(red, start, shard_elems), \
+            bstate
+
+    def zero1_allgather_params(self, stage: BucketStage,
+                               shard: jax.Array, out: List[Any],
+                               axes: Tuple[str, ...], p: int) -> None:
+        """Broadcast one dense stage's UPDATED param shard to every
+        worker through the (stateless) param codec — the ZeRO-1 half
+        that replaces the grads' trailing allgather — and unpack the
+        reassembled bucket into ``out``'s param leaves.  Quantised
+        param wires decode each worker's chunk against that worker's
+        own absmax scale, exactly like the sparse gather path."""
+        bucket = self.dense_buckets[stage.bucket_id]
+        pc = self.config.param_codec_obj
+        be = self.config.backend_obj
+        shard_elems = shard.shape[0]
+        wire, scale = pc.encode(shard.astype(jnp.float32),
+                                use_kernel=self.config.use_kernel)
+        if not axes:
+            buf = pc.decode(wire, scale, jnp.float32)
+        elif pc.linear:
+            buf = pc.decode(be.all_gather(wire, axes), None, jnp.float32)
+        else:
+            g_wire = be.all_gather(wire, axes)
+            g_scale = be.all_gather(scale, axes)
+            per = g_wire.astype(jnp.float32).reshape(p, shard_elems)
+            per = per * g_scale.astype(jnp.float32).reshape(p, 1)
+            buf = per.reshape(-1)
+        self.unpack_bucket(bucket, buf[:bucket.n_elems], out, None)
 
 
 # ---------------------------------------------------------------------------

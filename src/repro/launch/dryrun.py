@@ -262,6 +262,8 @@ def audit_exchange_plan(arch: str = "transformer-big", n_workers: int = 8,
                         backend: str = "jax",
                         overlap=False,
                         error_feedback: bool = False,
+                        zero1: bool = False,
+                        param_codec: str = "identity",
                         batch_per_worker: int = 2,
                         seq_len: int = 32,
                         profile: str = "ib") -> Dict[str, Any]:
@@ -292,6 +294,11 @@ def audit_exchange_plan(arch: str = "transformer-big", n_workers: int = 8,
     Stateful codecs (``error_feedback=True`` or a ``+ef`` codec name)
     lower with their ExchangeState threaded through the jitted exchange
     — residual feedback must add ZERO collectives and ZERO wire bytes.
+
+    With ``zero1=True`` the FUSED ZeRO-1 step is lowered instead
+    (grad reduce-scatter, flat-shard optimizer update on the sharded
+    Zero1State, updated-param allgather): the plan's per-stage counts
+    and wire must stay exact INCLUDING the param-allgather halves.
     """
     import numpy as np
     from jax.sharding import Mesh, PartitionSpec as P
@@ -321,7 +328,8 @@ def audit_exchange_plan(arch: str = "transformer-big", n_workers: int = 8,
             fusion_threshold=fusion_threshold,
             reduce_scatter=reduce_scatter, wire_dtype=wire_dtype,
             codec=codec, backend=backend, overlap=overlap,
-            error_feedback=error_feedback),
+            error_feedback=error_feedback, zero1=zero1,
+            param_codec=param_codec),
         axis_name=axis_name)
     plan = opt.plan(grads)
 
@@ -334,7 +342,35 @@ def audit_exchange_plan(arch: str = "transformer-big", n_workers: int = 8,
     # so the audited HLO is what training runs; the model compute adds
     # zero collectives under the replicated in_specs, so the plan's
     # counts and wire stay exact.
-    if plan.config.overlap_backward:
+    if plan.config.zero1:
+        # lower the fused zero1 step: collectives are the grad RS (or
+        # quantised AG + decode-sum + slice) PLUS the updated-param
+        # allgather — the optimizer math itself must add none
+        from repro.optim import zero1 as zero1_lib
+
+        z0 = opt.init_zero1_state(grads, params, n_workers=n_workers)
+        zspec = zero1_lib.state_specs(plan, z0, axis_name)
+        if plan.config.codec_obj.stateful:
+            state0 = plan.init_state(n_workers=n_workers)
+
+            def z_fn(g, p_, z, s):
+                return opt.zero1_step(g, p_, z, exchange_state=s)
+
+            ex = shard_map(z_fn, mesh=mesh,
+                           in_specs=(P(), P(), zspec, P(axis_name)),
+                           out_specs=(P(), zspec, P(axis_name)),
+                           check_rep=False)
+            lower_args = (grads, params, z0, state0)
+        else:
+            def z_fn(g, p_, z):
+                new_p, new_z, _ = opt.zero1_step(g, p_, z)
+                return new_p, new_z
+
+            ex = shard_map(z_fn, mesh=mesh,
+                           in_specs=(P(), P(), zspec),
+                           out_specs=(P(), zspec), check_rep=False)
+            lower_args = (grads, params, z0)
+    elif plan.config.overlap_backward:
         from repro.training.gradients import wait_free_grad_exchange
 
         if plan.config.codec_obj.stateful:
@@ -704,7 +740,15 @@ def main(argv=None) -> int:
     ap.add_argument("--mode", default="gspmd", choices=["gspmd"])
     ap.add_argument("--no-fsdp", action="store_true")
     ap.add_argument("--zero1", action="store_true",
-                    help="with --pure-dp: shard optimizer state (ZeRO-1)")
+                    help="with --pure-dp: shard optimizer state (ZeRO-1). "
+                         "With --audit-exchange (shard_map mode): lower "
+                         "the fused ZeRO-1 step — grad reduce-scatter, "
+                         "flat-shard optimizer update, updated-param "
+                         "allgather — and verify the plan's counts and "
+                         "wire stay exact including the param-AG stages")
+    ap.add_argument("--param-codec", default="identity",
+                    help="with --audit-exchange --zero1: WireCodec for "
+                         "the updated-param allgather")
     ap.add_argument("--pure-dp", action="store_true",
                     help="paper-faithful Horovod layout: replicated "
                          "weights, batch over all axes, grads allreduced")
@@ -750,6 +794,8 @@ def main(argv=None) -> int:
                 codec=args.codec, backend=args.backend,
                 overlap=args.overlap or False,
                 error_feedback=args.error_feedback,
+                zero1=args.zero1,
+                param_codec=args.param_codec,
                 profile=args.profile)
         print(json.dumps(result, indent=2, default=str))
         if args.out:

@@ -64,6 +64,8 @@ def build_optimizer(args, cfg,
             backend=args.backend,
             overlap=args.overlap or False,
             error_feedback=args.error_feedback,
+            zero1=getattr(args, "zero1", False),
+            param_codec=getattr(args, "param_codec", "identity"),
         )
     axis = dist_axes(args, backend=exchange.backend)
     return DistributedOptimizer(base, exchange=exchange, axis_name=axis)
@@ -189,6 +191,19 @@ def main(argv=None) -> int:
                          "block-aligned and each block's collective "
                          "launches from inside the backward pass, the "
                          "moment its cotangents are emitted")
+    ap.add_argument("--zero1", action="store_true",
+                    help="ZeRO-1: reduce-scatter each dense bucket's "
+                         "gradient, run the optimizer on this worker's "
+                         "1/P flat shard of (f32 master params + EMA "
+                         "state), and allgather the UPDATED params back "
+                         "through the same bucket schedule — P-fold "
+                         "optimizer-state memory cut at allreduce-equal "
+                         "wire cost (see docs/zero.md)")
+    ap.add_argument("--param-codec", default="identity",
+                    help="WireCodec for the zero1 updated-param "
+                         "allgather (stateless codecs only; default "
+                         "identity keeps the step bitwise-identical to "
+                         "the replicated path)")
     ap.add_argument("--batch-per-worker", type=int, default=4)
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--steps", type=int, default=50)
@@ -231,10 +246,11 @@ def main(argv=None) -> int:
         tuned_exchange = resolve_tuned_exchange(
             args, cfg, model, params, sparse_embedding, n_dev)
     opt = build_optimizer(args, cfg, exchange=tuned_exchange)
-    opt_state = opt.init(params)
     step = make_train_step(model, opt, sparse_embedding=sparse_embedding)
 
     stateful = step.stateful_exchange
+    zero1 = opt.zero1
+    mesh = axes = pspec_batch = None
     if args.dist == "horovod":
         axes = dist_axes(args, backend=opt.exchange_config.backend)
         if len(axes) == 2:
@@ -246,19 +262,6 @@ def main(argv=None) -> int:
             shape = (n_dev,)
         mesh = Mesh(np.array(jax.devices()).reshape(shape), axes)
         pspec_batch = P(axes)
-        if stateful:
-            # ExchangeState leaves are flat per-worker residuals stacked
-            # on dim 0: shard them over the data axes so each worker
-            # reads and writes only its own slice
-            step = shard_map(step, mesh=mesh,
-                             in_specs=(P(), P(), P(axes), pspec_batch),
-                             out_specs=(P(), P(), P(axes), P()),
-                             check_rep=False)
-        else:
-            step = shard_map(step, mesh=mesh,
-                             in_specs=(P(), P(), pspec_batch),
-                             out_specs=(P(), P(), P()),
-                             check_rep=False)
         batch_per_host = args.batch_per_worker * n_dev
         print(f"horovod mode: {n_dev} workers ({'x'.join(map(str, shape))}"
               f" {'/'.join(axes)}), global batch "
@@ -271,17 +274,48 @@ def main(argv=None) -> int:
                          task=args.task)
     g = None
     ex_cfg = opt.exchange_config
-    if ex_cfg.overlap or stateful or args.tuned \
+    if ex_cfg.overlap or stateful or args.tuned or zero1 \
             or ex_cfg.backend == "hierarchical":
         g = print_exchange_schedule(args, model, params, opt, pipe,
                                     sparse_embedding, n_dev)
+    workers = n_dev if args.dist == "horovod" else 1
+    if zero1:
+        # optimizer state is the sharded Zero1State, laid out along the
+        # plan's bucket partition (the GLOBAL view; shard_map splits it)
+        if g is None:
+            g = abstract_worker_grads(args, model, params, pipe,
+                                      sparse_embedding)
+        opt_state = opt.init_zero1_state(g, params, n_workers=workers)
+    else:
+        opt_state = opt.init(params)
     ex_state = None
     if stateful:
         if g is None:
             g = abstract_worker_grads(args, model, params, pipe,
                                       sparse_embedding)
-        ex_state = opt.init_exchange_state(
-            g, n_workers=n_dev if args.dist == "horovod" else 1)
+        ex_state = opt.init_exchange_state(g, n_workers=workers)
+
+    if args.dist == "horovod":
+        if zero1:
+            from repro.optim import zero1 as zero1_lib
+            ostate_spec = zero1_lib.state_specs(opt.plan(g), opt_state,
+                                                axes)
+        else:
+            ostate_spec = P()
+        if stateful:
+            # ExchangeState leaves are flat per-worker residuals stacked
+            # on dim 0: shard them over the data axes so each worker
+            # reads and writes only its own slice
+            step = shard_map(step, mesh=mesh,
+                             in_specs=(P(), ostate_spec, P(axes),
+                                       pspec_batch),
+                             out_specs=(P(), ostate_spec, P(axes), P()),
+                             check_rep=False)
+        else:
+            step = shard_map(step, mesh=mesh,
+                             in_specs=(P(), ostate_spec, pspec_batch),
+                             out_specs=(P(), ostate_spec, P()),
+                             check_rep=False)
     trainer = Trainer(model, step, pipe, TrainerConfig(
         total_steps=args.steps, log_every=args.log_every,
         checkpoint_every=args.checkpoint_every,

@@ -1,3 +1,4 @@
 from repro.optim.adamw import adamw, sgd_momentum
 from repro.optim.schedule import noam_schedule, cosine_schedule, constant_schedule
 from repro.optim.base import Optimizer, apply_updates
+from repro.optim.zero1 import Zero1State

@@ -23,44 +23,65 @@ def _as_schedule(lr) -> Callable:
 
 def adamw(lr: Union[float, Callable] = 1e-3, b1: float = 0.9,
           b2: float = 0.98, eps: float = 1e-9,
-          weight_decay: float = 0.0) -> Optimizer:
-    """AdamW with the paper's transformer defaults (b2=0.98, eps=1e-9)."""
+          weight_decay: float = 0.0,
+          state_dtype: str = "float32") -> Optimizer:
+    """AdamW with the paper's transformer defaults (b2=0.98, eps=1e-9).
+
+    ``state_dtype`` sets the STORAGE dtype of the mu/nu EMA buffers
+    (``"bfloat16"`` halves optimizer-state memory); the update math is
+    always performed in f32 after upcasting, so the replicated and
+    ZeRO-1 sharded paths stay elementwise-identical for a given
+    ``state_dtype``.
+    """
     sched = _as_schedule(lr)
+    sdtype = jnp.dtype(state_dtype)
+
+    def _math(g, m, v, p, step):
+        # the one copy of the AdamW element math — tree update, flat
+        # ZeRO-1 shard update, and gather-leaf update all route here so
+        # the sharded path is bitwise equal to the replicated one
+        lr_t = sched(step)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        g = g.astype(jnp.float32)
+        m = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+        mhat = m / bc1
+        vhat = v / bc2
+        u = -lr_t * (mhat / (jnp.sqrt(vhat) + eps)
+                     + weight_decay * p.astype(jnp.float32))
+        return u, m.astype(sdtype), v.astype(sdtype)
 
     def init(params):
-        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        zeros = lambda p: jnp.zeros_like(p, dtype=sdtype)
         return AdamState(step=jnp.zeros((), jnp.int32),
                          mu=jax.tree_util.tree_map(zeros, params),
                          nu=jax.tree_util.tree_map(zeros, params))
 
     def update(grads, state, params):
         step = state.step + 1
-        lr_t = sched(step)
-        bc1 = 1 - b1 ** step.astype(jnp.float32)
-        bc2 = 1 - b2 ** step.astype(jnp.float32)
-
-        def upd(g, m, v, p):
-            g = g.astype(jnp.float32)
-            m = b1 * m + (1 - b1) * g
-            v = b2 * v + (1 - b2) * g * g
-            mhat = m / bc1
-            vhat = v / bc2
-            u = -lr_t * (mhat / (jnp.sqrt(vhat) + eps)
-                         + weight_decay * p.astype(jnp.float32))
-            return u, m, v
 
         flat_g, treedef = jax.tree_util.tree_flatten(grads)
         flat_m = jax.tree_util.tree_leaves(state.mu)
         flat_v = jax.tree_util.tree_leaves(state.nu)
         flat_p = jax.tree_util.tree_leaves(params)
-        out = [upd(g, m, v, p) for g, m, v, p in
+        out = [_math(g, m, v, p, step) for g, m, v, p in
                zip(flat_g, flat_m, flat_v, flat_p)]
         updates = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
         mu = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
         nu = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
         return updates, AdamState(step=step, mu=mu, nu=nu)
 
-    return Optimizer(init=init, update=update)
+    def flat_init(n_elems):
+        return (jnp.zeros((n_elems,), sdtype), jnp.zeros((n_elems,), sdtype))
+
+    def flat_update(g, state_arrays, p, step):
+        m, v = state_arrays
+        u, m, v = _math(g, m, v, p, step)
+        return (p.astype(jnp.float32) + u), (m, v)
+
+    return Optimizer(init=init, update=update, flat_init=flat_init,
+                     flat_update=flat_update, state_dtype=state_dtype)
 
 
 class MomentumState(NamedTuple):

@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Tuple
+from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -14,9 +14,27 @@ class Optimizer:
     ``update(grads, state, params) -> (updates, state)``.
 
     ``updates`` are ADDED to params (sign convention: update includes -lr).
+
+    Optimizers that can run over a flat 1-D shard of the parameter
+    vector (the ZeRO-1 layout: one contiguous slice of a fusion
+    bucket) additionally provide:
+
+    - ``flat_init(n_elems) -> tuple of state arrays`` (e.g. ``(mu,
+      nu)``), each shape ``(n_elems,)``;
+    - ``flat_update(g, state_arrays, p, step) -> (new_p,
+      new_state_arrays)`` where ``g``/``p`` are f32 arrays of any
+      shape, ``step`` is the post-increment step count, and the math
+      is ELEMENTWISE-IDENTICAL to ``update`` (so a sharded update
+      followed by an allgather is bitwise equal to the replicated
+      update);
+    - ``state_dtype``: storage dtype of the EMA buffers (math is
+      always f32; narrower storage trades memory for rounding).
     """
     init: Callable[[Any], Any]
     update: Callable[[Any, Any, Any], Tuple[Any, Any]]
+    flat_init: Optional[Callable[[int], Tuple[Any, ...]]] = None
+    flat_update: Optional[Callable] = None
+    state_dtype: str = "float32"
 
 
 def apply_updates(params, updates):

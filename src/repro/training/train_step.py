@@ -39,13 +39,33 @@ def make_train_step(model, opt: DistributedOptimizer,
     """Returns step(params, opt_state, batch) -> (params, opt_state,
     metrics) — or, when the optimizer's codec is stateful,
     step(params, opt_state, exchange_state, batch) -> (params,
-    opt_state, exchange_state, metrics)."""
+    opt_state, exchange_state, metrics).
+
+    With ``ExchangeConfig(zero1=True)`` the signatures are unchanged
+    but ``opt_state`` is the sharded ``Zero1State`` (from
+    ``opt.init_zero1_state``) and the step runs the fused ZeRO-1
+    schedule instead of exchange-then-update."""
     cfg = getattr(opt, "exchange_config", None)
     overlap = cfg is not None and cfg.overlap
     wait_free = cfg is not None and cfg.overlap_backward
     stateful = cfg is not None and cfg.codec_obj.stateful
+    zero1 = cfg is not None and cfg.zero1
 
     def _core(params, opt_state, batch, ex_state):
+        if zero1:
+            # ZeRO-1: the exchange IS the update — grad reduce-scatter,
+            # flat-shard optimizer math on this worker's 1/P slice, and
+            # the updated-param allgather run as ONE fused schedule.
+            # ``opt_state`` is the Zero1State (sharded over the mesh).
+            grads, loss, metrics = grad_contributions(
+                model, params, batch, sparse_embedding=sparse_embedding,
+                **loss_kw)
+            params, opt_state, ex_state = opt.zero1_step(
+                grads, params, opt_state, exchange_state=ex_state)
+            n_stages = opt.plan(grads).schedule.n_stages
+            metrics = dict(metrics, loss=loss,
+                           exchange_stages=jnp.int32(n_stages))
+            return params, opt_state, ex_state, metrics
         if wait_free:
             # overlap="backward": collectives launch from inside the
             # backward pass, per block, via custom_vjp taps

@@ -2,8 +2,8 @@
 
 The config space the repo has grown — accumulation algorithm × codec ×
 error feedback × backend (with per-hop requantize) × bucket size ×
-reduce-scatter × overlap mode — crossed and then PRUNED to the combos
-that are actually legal on the given mesh:
+reduce-scatter/zero1 layout × overlap mode — crossed and then PRUNED
+to the combos that are actually legal on the given mesh:
 
   * hierarchical backend (and therefore per-hop requantize) needs a
     multi-axis mesh — pruned on flat meshes;
@@ -58,6 +58,9 @@ def describe_config(cfg: ExchangeConfig) -> str:
              cfg.codec, cfg.backend]
     if cfg.reduce_scatter:
         parts.append("rs")
+    if cfg.zero1:
+        parts.append("zero1" if cfg.param_codec == "identity"
+                     else f"zero1:{cfg.param_codec}")
     parts.append(f"ov={cfg.overlap or 'off'}")
     if cfg.fusion_threshold is not None:
         parts.append(f"thr={cfg.fusion_threshold // (1024 * 1024)}MiB")
@@ -84,7 +87,8 @@ def enumerate_space(grads, n_workers: int, *,
                     overlaps: Sequence[Union[bool, str]] = DEFAULT_OVERLAPS,
                     thresholds: Sequence[Optional[int]] = DEFAULT_THRESHOLDS,
                     include_sparse_gather: Optional[bool] = None,
-                    include_reduce_scatter: bool = True
+                    include_reduce_scatter: bool = True,
+                    include_zero1: bool = True
                     ) -> List[Candidate]:
     """All valid candidates for this gradient tree on ``n_workers``.
 
@@ -112,10 +116,15 @@ def enumerate_space(grads, n_workers: int, *,
                 if backend == "hierarchical" and (
                         n_workers < 4 or n_workers % 2):
                     continue                 # per-hop needs a real fold
-                rs_choices = [False]
+                # (rs, zero1) are mutually exclusive layouts of the
+                # same RS+AG wire pattern; zero1 additionally shards
+                # the optimizer state, so it gets its own axis value
+                layouts = [(False, False)]
                 if include_reduce_scatter and backend != "hierarchical":
-                    rs_choices.append(True)
-                for rs in rs_choices:
+                    layouts.append((True, False))
+                if include_zero1 and backend != "hierarchical":
+                    layouts.append((False, True))
+                for rs, z1 in layouts:
                     for overlap in overlaps:
                         for thr in thresholds:
                             try:
@@ -123,6 +132,7 @@ def enumerate_space(grads, n_workers: int, *,
                                     sparse_as_dense=sparse_as_dense,
                                     fusion_threshold=thr,
                                     reduce_scatter=rs,
+                                    zero1=z1,
                                     codec=codec, backend=backend,
                                     overlap=overlap)
                             except ValueError:
