@@ -18,8 +18,31 @@
 #   §Autotuner          : tune      (analytic rank vs measured rank)
 import argparse
 import json
+import subprocess
 import sys
 import time
+
+
+def provenance(timestamp=None):
+    """Stamp a BENCH json with where its numbers came from: git rev,
+    caller-supplied timestamp (wall clocks on CI runners drift; the
+    caller knows better), jax version, and the device kind — so two
+    artifacts are only ever compared when these match."""
+    prov = {"timestamp": timestamp}
+    try:
+        prov["git_rev"] = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True,
+            text=True, timeout=10, check=True).stdout.strip()
+    except Exception:
+        prov["git_rev"] = None
+    try:
+        import jax
+        prov["jax_version"] = jax.__version__
+        prov["device_kind"] = jax.devices()[0].device_kind
+        prov["n_devices"] = jax.device_count()
+    except Exception:
+        prov["jax_version"] = prov["device_kind"] = None
+    return prov
 
 
 def main() -> None:
@@ -33,6 +56,9 @@ def main() -> None:
                          "output (machine-readable results)")
     ap.add_argument("--json-dir", default=".",
                     help="directory for the BENCH_<module>.json files")
+    ap.add_argument("--timestamp", default=None,
+                    help="caller-supplied run timestamp recorded in the "
+                         "BENCH json provenance block")
     args = ap.parse_args()
 
     from benchmarks import (accumulation_memory, accumulation_time,
@@ -55,6 +81,7 @@ def main() -> None:
 
     print("name,us_per_call,derived")
 
+    prov = provenance(args.timestamp) if args.json else None
     for name, mod in modules:
         rows = []
 
@@ -74,7 +101,8 @@ def main() -> None:
             path = os.path.join(args.json_dir, f"BENCH_{name}.json")
             with open(path, "w") as f:
                 json.dump({"module": name, "wall_s": wall_s,
-                           "rows": rows}, f, indent=2)
+                           "provenance": prov, "rows": rows},
+                          f, indent=2)
 
 
 if __name__ == '__main__':

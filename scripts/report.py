@@ -2,10 +2,16 @@
 """Render the experiment artifacts into one human-readable report.
 
     PYTHONPATH=src python scripts/report.py [--pod 1pod|2pod]
+        [--metrics metrics.jsonl] [--trace trace.json]
 
 Aggregates experiments/dryrun/*.json (roofline terms), the hillclimb
 JSONs, and the multi-pod coverage into a terminal report — the quick
 answer to "where does each architecture sit and what binds it".
+
+``--metrics`` / ``--trace`` additionally render a training run's
+telemetry artifacts (the JSONL written by ``train.py --metrics-jsonl``
+and the Chrome trace from ``--trace-dir``) next to the static numbers,
+closing the predicted-vs-measured loop in one report.
 """
 import argparse
 import glob
@@ -22,15 +28,60 @@ def load(pattern):
     return [json.load(open(f)) for f in sorted(glob.glob(pattern))]
 
 
+def render_metrics(path):
+    from repro.telemetry import report as report_lib
+
+    s = report_lib.summarize_metrics_jsonl(path)
+    print(f"=== training metrics ({path}) ===")
+    print(f"  steps: {s['n_steps']}")
+    if s.get("final_loss") is not None:
+        print(f"  final loss: {s['final_loss']:.4f}")
+    for k in ("step_ms", "data_ms", "compute_ms", "tok_s"):
+        v = s.get(f"mean_{k}")
+        if v is not None:
+            print(f"  mean {k}: {v:.2f}")
+    for name, val in s.get("counters", {}).items():
+        print(f"  counter {name}: {val}")
+    for name, h in s.get("histograms", {}).items():
+        print(f"  hist {name}: p50={h['p50_ms']:.2f}ms "
+              f"p99={h['p99_ms']:.2f}ms n={h['count']}")
+
+
+def render_trace(path):
+    from repro.telemetry import report as report_lib
+
+    trace = report_lib.load_trace(path)
+    rows = report_lib.predicted_vs_measured(trace)
+    print(f"=== exchange trace ({path}) ===")
+    print(report_lib.render_table(rows))
+    print(f"wire exact vs plan: {report_lib.wire_exact(rows)}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--pod", default="1pod", choices=["1pod", "2pod"])
+    ap.add_argument("--metrics", default=None,
+                    help="metrics JSONL from train.py --metrics-jsonl")
+    ap.add_argument("--trace", default=None,
+                    help="Chrome trace from train.py --trace-dir")
     args = ap.parse_args()
+
+    shown_telemetry = False
+    if args.metrics:
+        render_metrics(args.metrics)
+        shown_telemetry = True
+    if args.trace:
+        if shown_telemetry:
+            print()
+        render_trace(args.trace)
+        shown_telemetry = True
+    if shown_telemetry:
+        print()
 
     rows = load(os.path.join(SWEEP, f"*__{args.pod}.json"))
     if not rows:
         print("no dry-run artifacts; run scripts/run_dryruns.sh first")
-        return 1
+        return 0 if shown_telemetry else 1
 
     print(f"=== roofline ({args.pod}, {len(rows)} combos) ===")
     print(f"{'arch':22s} {'shape':12s} {'bound':7.7s} "

@@ -37,6 +37,7 @@ import jax.numpy as jnp
 
 from repro.core import comm
 from repro.core.codecs import WireCodec, dtype_bytes, padded_elems
+from repro.telemetry import hooks as _telemetry
 
 #: collective kinds a bucket can be scheduled onto (shared with the
 #: planner; ``exchange.py`` re-exports them)
@@ -215,6 +216,10 @@ class JaxCollectives(CollectiveBackend):
         return comm.all_reduce_dense(x, axes, average=False)
 
     def reduce_scatter(self, x, axes):
+        if _telemetry.wire_recorder() is not None:
+            _telemetry.record_collective(
+                "reduce-scatter", comm.reduce_scatter_wire_bytes(
+                    math.prod(x.shape), x.dtype, comm.axis_size(axes)))
         return jax.lax.psum_scatter(x, axes if len(axes) > 1 else axes[0],
                                     scatter_dimension=0, tiled=True)
 
@@ -396,6 +401,10 @@ class RingSimBackend(CollectiveBackend):
         ax, p, perm = self._ring(axes)
         if p == 1:
             return x
+        if _telemetry.wire_recorder() is not None:
+            _telemetry.record_collective(
+                "collective-permute",
+                self.allreduce_wire_bytes(x.shape[0], x.dtype, (p,)))
         n = x.shape[0]
         xp, cur, r = self._rs_phase(x, ax, p, perm, start_offset=0)
         # worker r now owns chunk (r+1) % p; circulate all chunks back
@@ -409,6 +418,11 @@ class RingSimBackend(CollectiveBackend):
         ax, p, perm = self._ring(axes)
         if p == 1:
             return x
+        if _telemetry.wire_recorder() is not None:
+            chunk = padded_elems(x.shape[0], p) // p
+            _telemetry.record_collective(
+                "collective-permute",
+                (p - 1) * chunk * dtype_bytes(x.dtype))
         # start at r-1 so worker r ends owning chunk r (psum_scatter order)
         _, cur, _ = self._rs_phase(x, ax, p, perm, start_offset=-1)
         return cur
@@ -417,6 +431,10 @@ class RingSimBackend(CollectiveBackend):
         ax, p, perm = self._ring(axes)
         if p == 1:
             return x
+        if _telemetry.wire_recorder() is not None:
+            _telemetry.record_collective(
+                "collective-permute",
+                (p - 1) * math.prod(x.shape) * dtype_bytes(x.dtype))
         r = jax.lax.axis_index(ax)
         parts = jnp.zeros((p,) + x.shape, x.dtype).at[r].set(x)
         cur = x

@@ -27,6 +27,7 @@ import jax.numpy as jnp
 
 from repro.core.codecs import dtype_bytes  # noqa: F401  (canonical home)
 from repro.core.indexed_slices import IndexedSlices
+from repro.telemetry import hooks as _telemetry
 
 AxisNames = Union[None, str, Sequence[str]]
 
@@ -62,6 +63,9 @@ def all_reduce_dense(x: jax.Array, axis_name: AxisNames,
     axes = _axes(axis_name)
     if not axes:
         return x
+    if _telemetry.wire_recorder() is not None:
+        _telemetry.record_collective("all-reduce", allreduce_wire_bytes(
+            x.shape, x.dtype, axis_size(axes)))
     out = jax.lax.psum(x, axes)
     if average:
         out = out / axis_size(axes)
@@ -76,6 +80,10 @@ def reduce_scatter_dense(x: jax.Array, axis_name: str,
     (ZeRO-style); with sharded optimizer state the full dense gradient is
     never materialised per worker.
     """
+    if _telemetry.wire_recorder() is not None:
+        _telemetry.record_collective(
+            "reduce-scatter", reduce_scatter_wire_bytes(
+                math.prod(x.shape), x.dtype, axis_size(axis_name)))
     out = jax.lax.psum_scatter(x, axis_name, scatter_dimension=0, tiled=True)
     if average:
         out = out / axis_size(axis_name)
@@ -87,6 +95,11 @@ def all_gather_dense(x: jax.Array, axis_name: AxisNames) -> jax.Array:
     the reduce-scatter + allgather decomposition of allreduce)."""
     axes = _axes(axis_name)
     for a in reversed(axes):
+        if _telemetry.wire_recorder() is not None:
+            # per-axis billing telescopes to (P-1) * original bytes
+            _telemetry.record_collective(
+                "all-gather", (axis_size(a) - 1) * math.prod(x.shape)
+                * dtype_bytes(x.dtype))
         x = jax.lax.all_gather(x, a, axis=0, tiled=True)
     return x
 
@@ -104,6 +117,9 @@ def two_level_all_reduce(x: jax.Array, axis_name: AxisNames,
     if not axes:
         return x
     for a in reversed(axes):
+        if _telemetry.wire_recorder() is not None:
+            _telemetry.record_collective("all-reduce", allreduce_wire_bytes(
+                x.shape, x.dtype, axis_size(a)))
         x = jax.lax.psum(x, a)
     if average:
         x = x / axis_size(axes)
@@ -125,6 +141,11 @@ def all_gather_slices(s: IndexedSlices, axis_name: AxisNames) -> IndexedSlices:
         return s
     indices, values = s.indices, s.values
     for a in reversed(axes):
+        if _telemetry.wire_recorder() is not None:
+            nbytes = (math.prod(indices.shape) * dtype_bytes(indices.dtype)
+                      + math.prod(values.shape) * dtype_bytes(values.dtype))
+            _telemetry.record_collective(
+                "all-gather", (axis_size(a) - 1) * nbytes)
         indices = jax.lax.all_gather(indices, a, axis=0, tiled=True)
         values = jax.lax.all_gather(values, a, axis=0, tiled=True)
     return IndexedSlices(indices=indices, values=values,

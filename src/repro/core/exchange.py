@@ -59,6 +59,7 @@ from repro.core import accumulation, backend as backend_lib, codecs, comm, \
 from repro.core.backend import ALLGATHER, ALLREDUCE, REDUCE_SCATTER
 from repro.core.codecs import ExchangeState, canonical_dtype
 from repro.core.indexed_slices import IndexedSlices, concat_slices
+from repro.telemetry import hooks as _telemetry
 
 # ---------------------------------------------------------------------------
 # Configuration
@@ -786,6 +787,34 @@ class ExchangePlan:
                                      for k, b in enumerate(hops)))
         return "\n".join(lines)
 
+    # -- telemetry naming ----------------------------------------------------
+    def stage_name(self, stage: BucketStage,
+                   index: Optional[int] = None) -> str:
+        """Structured annotation name for one stage — the identity the
+        telemetry subsystem keys everything on (``jax.named_scope``
+        paths in lowered HLO, wire-recorder stage attribution, trace
+        rows, and the predicted-vs-measured report):
+
+            exchange/s03/allreduce/bucket=dense2[/trigger=block5]
+        """
+        k = (self.schedule.stages.index(stage) if index is None
+             else index)
+        if stage.kind == "dense":
+            coll = self.dense_buckets[stage.bucket_id].collective
+            bucket = f"dense{stage.bucket_id}"
+        else:
+            coll = ALLGATHER
+            bucket = f"leaf{stage.bucket_id}"
+        name = f"exchange/s{k:02d}/{coll}/bucket={bucket}"
+        if stage.trigger:
+            name += f"/trigger={stage.trigger}"
+        return name
+
+    def stage_names(self) -> Tuple[str, ...]:
+        """Annotation names in schedule order (one per stage)."""
+        return tuple(self.stage_name(s, k)
+                     for k, s in enumerate(self.schedule.stages))
+
     # -- execution -----------------------------------------------------------
     def accumulate(self, grads) -> List[Any]:
         """Step 1 at runtime: per-leaf accumulation to the classified
@@ -816,25 +845,28 @@ class ExchangePlan:
         pack_dtype = (bucket.wire_dtype
                       if codec.linear and not codec.stateful
                       else "float32")
-        parts = []
-        for slot in bucket.slots:
-            leaf_id = self.dense_leaf_ids[slot.leaf_idx]
-            x = _materialise(leaves[leaf_id], self.config)
-            parts.append(x.reshape(-1).astype(pack_dtype))
-        return parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+        with jax.named_scope("pack"):
+            parts = []
+            for slot in bucket.slots:
+                leaf_id = self.dense_leaf_ids[slot.leaf_idx]
+                x = _materialise(leaves[leaf_id], self.config)
+                parts.append(x.reshape(-1).astype(pack_dtype))
+            return parts[0] if len(parts) == 1 else jnp.concatenate(parts)
 
     def unpack_bucket(self, bucket: DenseBucket, buf: jax.Array,
                       out: List[Any], inv_scale) -> None:
         """Invert ``pack_bucket``: split, reshape, upcast to each leaf's
         original dtype, apply gradient averaging."""
-        for slot in bucket.slots:
-            leaf_id = self.dense_leaf_ids[slot.leaf_idx]
-            spec = self.leaf_specs[leaf_id]
-            x = jax.lax.dynamic_slice_in_dim(buf, slot.offset, slot.size)
-            x = x.reshape(spec.shape).astype(spec.dtype)
-            if inv_scale is not None:
-                x = x * inv_scale
-            out[leaf_id] = x
+        with jax.named_scope("unpack"):
+            for slot in bucket.slots:
+                leaf_id = self.dense_leaf_ids[slot.leaf_idx]
+                spec = self.leaf_specs[leaf_id]
+                x = jax.lax.dynamic_slice_in_dim(buf, slot.offset,
+                                                 slot.size)
+                x = x.reshape(spec.shape).astype(spec.dtype)
+                if inv_scale is not None:
+                    x = x * inv_scale
+                out[leaf_id] = x
 
     def _check_axes(self, axis_name: comm.AxisNames) -> Tuple[str, ...]:
         axes = tuple(a for a in ([axis_name] if isinstance(axis_name, str)
@@ -886,8 +918,10 @@ class ExchangePlan:
         s = leaves[stage.bucket_id]
         codec = self.config.codec_obj
         be = self.config.backend_obj
-        wire, scale = codec.encode(s.values,
-                                   use_kernel=self.config.use_kernel)
+        with jax.named_scope("quantize"):
+            wire, scale = codec.encode(s.values,
+                                       use_kernel=self.config.use_kernel)
+        wire = _telemetry.tap("pack", wire)
         rows = s.values.shape[0]
         if not axes:
             return (s.indices, wire, scale, rows)
@@ -933,13 +967,17 @@ class ExchangePlan:
         codec = self.config.codec_obj
         be = self.config.backend_obj
         for level, ax in enumerate(reversed(axes)):
-            wire, scale, bstate = codec.encode_hop(
-                buf, bstate, level, use_kernel=self.config.use_kernel)
-            p_ax = comm.axis_size((ax,))
-            g_wire = be.all_gather(wire, (ax,))
-            g_scale = (be.all_gather(scale, (ax,))
-                       if scale is not None else None)
-            buf = codec.reduce_hop(g_wire, g_scale, p_ax, jnp.float32)
+            with jax.named_scope(f"hop{level}"):
+                with jax.named_scope("quantize"):
+                    wire, scale, bstate = codec.encode_hop(
+                        buf, bstate, level,
+                        use_kernel=self.config.use_kernel)
+                p_ax = comm.axis_size((ax,))
+                g_wire = be.all_gather(wire, (ax,))
+                g_scale = (be.all_gather(scale, (ax,))
+                           if scale is not None else None)
+                buf = codec.reduce_hop(g_wire, g_scale, p_ax,
+                                       jnp.float32)
         return buf, bstate
 
     def _launch_dense(self, stage: BucketStage, leaves: List[Any],
@@ -955,7 +993,7 @@ class ExchangePlan:
         bucket = self.dense_buckets[stage.bucket_id]
         codec = self.config.codec_obj
         be = self.config.backend_obj
-        buf = self.pack_bucket(bucket, leaves)
+        buf = _telemetry.tap("pack", self.pack_bucket(bucket, leaves))
         if codec.linear and not codec.stateful:
             if not axes:
                 return (buf,), bstate
@@ -971,8 +1009,9 @@ class ExchangePlan:
                 and len(axes) > 1:
             red, bstate = self._hop_reduce_dense(buf, bstate, axes)
             return (red,), bstate
-        wire, scale, bstate = codec.encode_stateful(
-            buf, bstate, use_kernel=self.config.use_kernel)
+        with jax.named_scope("quantize"):
+            wire, scale, bstate = codec.encode_stateful(
+                buf, bstate, use_kernel=self.config.use_kernel)
         if codec.linear:
             # stateful linear (e.g. bf16+ef): the compensated wire still
             # sums in flight; decode is the unpack upcast
@@ -1015,19 +1054,35 @@ class ExchangePlan:
         this stage's updated codec state (passed through untouched for
         zero-state codecs).  ``leaves`` must hold the accumulated
         representation for every id in ``stage.leaf_ids``."""
-        if stage.kind == "dense":
-            return self._launch_dense(stage, leaves, axes, p, bstate)
-        return self._launch_gather(stage, leaves, axes), bstate
+        name = self.stage_name(stage)
+        with jax.named_scope(name), _telemetry.stage_scope(name):
+            if stage.kind == "dense":
+                inflight, bstate = self._launch_dense(stage, leaves,
+                                                      axes, p, bstate)
+            else:
+                inflight = self._launch_gather(stage, leaves, axes)
+            if _telemetry.tracer() is not None and inflight \
+                    and isinstance(inflight[0], jax.Array):
+                inflight = (_telemetry.tap("collective", inflight[0]),
+                            ) + tuple(inflight[1:])
+            return inflight, bstate
 
     def finish_stage(self, stage: BucketStage, inflight: Tuple,
                      out: List[Any], inv_scale, axes: Tuple[str, ...],
                      p: int) -> None:
         """Unpack one launched stage's results into ``out`` (decode,
         densify gathers, upcast, apply gradient averaging)."""
-        if stage.kind == "dense":
-            self._finish_dense(stage, inflight, out, inv_scale, axes, p)
-        else:
-            self._finish_gather(stage, inflight, out, inv_scale, axes, p)
+        name = self.stage_name(stage)
+        with jax.named_scope(name), _telemetry.stage_scope(name):
+            if stage.kind == "dense":
+                self._finish_dense(stage, inflight, out, inv_scale,
+                                   axes, p)
+            else:
+                self._finish_gather(stage, inflight, out, inv_scale,
+                                    axes, p)
+            if _telemetry.tracer() is not None:
+                i0 = min(stage.leaf_ids)
+                out[i0] = _telemetry.tap("unpack", out[i0])
 
     def _flatten_checked(self, grads) -> List[Any]:
         leaves, treedef = jax.tree_util.tree_flatten(grads,
@@ -1051,9 +1106,16 @@ class ExchangePlan:
         their classified representation (the deferred part of the
         paper's step 1, interleaved with earlier stages' collectives
         under the scheduled execution)."""
-        for i in stage.leaf_ids:
-            acc[i] = _accumulate_leaf(raw[i], self.leaf_specs[i],
-                                      self.config)
+        name = self.stage_name(stage)
+        with jax.named_scope(name), _telemetry.stage_scope(name):
+            for i in stage.leaf_ids:
+                acc[i] = _accumulate_leaf(raw[i], self.leaf_specs[i],
+                                          self.config)
+            if _telemetry.tracer() is not None:
+                for i in stage.leaf_ids:
+                    if isinstance(acc[i], jax.Array):
+                        acc[i] = _telemetry.tap("accumulate", acc[i])
+                        break
 
     # -- codec state ---------------------------------------------------------
     def init_state(self, n_workers: int = 1) -> ExchangeState:
@@ -1231,19 +1293,21 @@ class ExchangePlan:
         codec = self.config.codec_obj
         be = self.config.backend_obj
         out: List[Any] = list(leaves)
-        for bucket in self.dense_buckets:
-            buf = self.pack_bucket(bucket, leaves)
-            if codec.linear:
-                if axes:
-                    buf = be.broadcast(buf, axes, root=root)
-            else:
-                wire, scale = codec.encode(
-                    buf, use_kernel=self.config.use_kernel)
-                if axes:
-                    wire = be.broadcast(wire, axes, root=root)
-                    scale = be.broadcast(scale, axes, root=root)
-                buf = codec.decode(wire, scale, jnp.float32)
-            self.unpack_bucket(bucket, buf, out, None)
+        for b_id, bucket in enumerate(self.dense_buckets):
+            name = f"exchange/broadcast/bucket=dense{b_id}"
+            with jax.named_scope(name), _telemetry.stage_scope(name):
+                buf = self.pack_bucket(bucket, leaves)
+                if codec.linear:
+                    if axes:
+                        buf = be.broadcast(buf, axes, root=root)
+                else:
+                    wire, scale = codec.encode(
+                        buf, use_kernel=self.config.use_kernel)
+                    if axes:
+                        wire = be.broadcast(wire, axes, root=root)
+                        scale = be.broadcast(scale, axes, root=root)
+                    buf = codec.decode(wire, scale, jnp.float32)
+                self.unpack_bucket(bucket, buf, out, None)
         return jax.tree_util.tree_unflatten(self.treedef, out)
 
     # -- ZeRO-1 execution (the fused exchange+update schedule) ---------------
@@ -1268,11 +1332,20 @@ class ExchangePlan:
         decode-sum and slice this worker's shard of the full sum, so
         gradients (and error-feedback residuals) match the replicated
         path bit for bit.  Returns ``(shard, new codec state)``."""
+        name = self.stage_name(stage)
+        with jax.named_scope(name), _telemetry.stage_scope(name):
+            shard, bstate = self._zero1_grad_shard(stage, leaves, axes,
+                                                   p, bstate)
+            return _telemetry.tap("collective", shard), bstate
+
+    def _zero1_grad_shard(self, stage: BucketStage, leaves: List[Any],
+                          axes: Tuple[str, ...], p: int, bstate
+                          ) -> Tuple[jax.Array, Any]:
         bucket = self.dense_buckets[stage.bucket_id]
         codec = self.config.codec_obj
         be = self.config.backend_obj
         shard_elems = self.zero1_shard_elems(stage, p)
-        buf = self.pack_bucket(bucket, leaves)
+        buf = _telemetry.tap("pack", self.pack_bucket(bucket, leaves))
         if codec.linear:
             if codec.stateful:
                 # e.g. bf16+ef: the compensated wire still sums in flight
@@ -1318,19 +1391,30 @@ class ExchangePlan:
         pc = self.config.param_codec_obj
         be = self.config.backend_obj
         shard_elems = shard.shape[0]
-        wire, scale = pc.encode(shard.astype(jnp.float32),
-                                use_kernel=self.config.use_kernel)
-        if not axes:
-            buf = pc.decode(wire, scale, jnp.float32)
-        elif pc.linear:
-            buf = pc.decode(be.all_gather(wire, axes), None, jnp.float32)
-        else:
-            g_wire = be.all_gather(wire, axes)
-            g_scale = be.all_gather(scale, axes)
-            per = g_wire.astype(jnp.float32).reshape(p, shard_elems)
-            per = per * g_scale.astype(jnp.float32).reshape(p, 1)
-            buf = per.reshape(-1)
-        self.unpack_bucket(bucket, buf[:bucket.n_elems], out, None)
+        # the param half bills to the SAME stage name as the grad half,
+        # so a stage's recorded wire totals its RS + param-AG schedule
+        name = self.stage_name(stage)
+        with jax.named_scope(name), _telemetry.stage_scope(name):
+            with jax.named_scope("quantize"):
+                wire, scale = pc.encode(shard.astype(jnp.float32),
+                                        use_kernel=self.config.use_kernel)
+            if not axes:
+                buf = pc.decode(wire, scale, jnp.float32)
+            elif pc.linear:
+                buf = pc.decode(be.all_gather(wire, axes), None,
+                                jnp.float32)
+            else:
+                g_wire = be.all_gather(wire, axes)
+                g_scale = be.all_gather(scale, axes)
+                per = g_wire.astype(jnp.float32).reshape(p, shard_elems)
+                per = per * g_scale.astype(jnp.float32).reshape(p, 1)
+                buf = per.reshape(-1)
+            if _telemetry.tracer() is not None:
+                buf = _telemetry.tap("collective", buf)
+            self.unpack_bucket(bucket, buf[:bucket.n_elems], out, None)
+            if _telemetry.tracer() is not None:
+                i0 = min(stage.leaf_ids)
+                out[i0] = _telemetry.tap("unpack", out[i0])
 
 
 # ---------------------------------------------------------------------------

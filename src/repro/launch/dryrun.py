@@ -266,7 +266,8 @@ def audit_exchange_plan(arch: str = "transformer-big", n_workers: int = 8,
                         param_codec: str = "identity",
                         batch_per_worker: int = 2,
                         seq_len: int = 32,
-                        profile: str = "ib") -> Dict[str, Any]:
+                        profile: str = "ib",
+                        trace_dir: Optional[str] = None) -> Dict[str, Any]:
     """Check the static ExchangePlan against lowered HLO.
 
     Lowers the plan-scheduled exchange under ``shard_map`` on
@@ -408,6 +409,29 @@ def audit_exchange_plan(arch: str = "transformer-big", n_workers: int = 8,
                        out_specs=P(), check_rep=False)
         lower_args = (grads,)
     hlo = jax.jit(ex).lower(*lower_args).compile().as_text()
+
+    trace_info: Dict[str, Any] = {}
+    if trace_dir:
+        # runtime leg of the audit: actually run one instrumented step
+        # (wire counters + host-timestamp taps) and diff it against the
+        # same plan accounting the static HLO check below verifies
+        import os
+
+        from repro.telemetry import report as report_lib
+        from repro.telemetry import trace as trace_lib
+
+        os.makedirs(trace_dir, exist_ok=True)
+        out_path = os.path.join(trace_dir, "trace.json")
+        trace = trace_lib.capture_exchange_trace(
+            plan, ex, lower_args, axis_name, workers,
+            profile=profile, out_path=out_path,
+            extra_meta={"arch": arch, "source": "dryrun"})
+        rows = report_lib.predicted_vs_measured(trace)
+        trace_info = dict(
+            trace_path=out_path,
+            runtime_wire_exact=report_lib.wire_exact(rows),
+            trace_table=report_lib.render_table(rows))
+
     counts = hlo_lib.count_collectives(hlo)
     coll_bytes = {k: v for k, v in hlo_lib.analyze_collectives(hlo).items()
                   if k != "__bytes__"}
@@ -483,6 +507,7 @@ def audit_exchange_plan(arch: str = "transformer-big", n_workers: int = 8,
         schedule=schedule_info,
         schedule_table=plan.describe_schedule(workers),
         plan_table=plan.describe(),
+        **trace_info,
     )
 
 
@@ -757,6 +782,11 @@ def main(argv=None) -> int:
     ap.add_argument("--moe-decode", default="dropless",
                     choices=["dropless", "capacity"])
     ap.add_argument("--loss-chunk", type=int, default=512)
+    ap.add_argument("--trace", default=None, metavar="DIR",
+                    help="with --audit-exchange (shard_map mode): also "
+                         "RUN one instrumented exchange step, write a "
+                         "Chrome trace to DIR/trace.json, and report "
+                         "runtime-measured wire vs the plan accounting")
     ap.add_argument("--out", default=None)
     ap.add_argument("--print-hlo", action="store_true")
     args = ap.parse_args(argv)
@@ -796,8 +826,13 @@ def main(argv=None) -> int:
                 error_feedback=args.error_feedback,
                 zero1=args.zero1,
                 param_codec=args.param_codec,
-                profile=args.profile)
+                profile=args.profile,
+                trace_dir=args.trace)
+        table = result.pop("trace_table", None)
         print(json.dumps(result, indent=2, default=str))
+        if table:
+            print("\npredicted vs measured (runtime trace):")
+            print(table)
         if args.out:
             with open(args.out, "w") as f:
                 json.dump(result, f, indent=2, default=str)

@@ -143,6 +143,49 @@ def print_exchange_schedule(args, model, params, opt, pipe,
     return g
 
 
+def capture_training_trace(args, opt, model, params, pipe, g, step_fn,
+                           result, ex_state, opt_state, axes, n_dev,
+                           sparse_embedding) -> None:
+    """--trace-dir: capture ONE instrumented step at the final weights
+    and write the Chrome trace + predicted-vs-measured table.  The
+    training loop itself ran untraced — taps lower into a fresh jit of
+    the same step function, so capture costs one extra compile, not a
+    per-step tax."""
+    import os
+
+    from repro.telemetry import report as report_lib
+    from repro.telemetry import trace as trace_lib
+
+    if g is None:
+        g = abstract_worker_grads(args, model, params, pipe,
+                                  sparse_embedding)
+    plan = opt.plan(g)
+    batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(0).items()}
+    final_params = result["params"]
+    final_opt = result["opt_state"]
+    if result["exchange_state"] is not None:
+        fn_args = (final_params, final_opt, result["exchange_state"],
+                   batch)
+    else:
+        fn_args = (final_params, final_opt, batch)
+    if args.dist == "horovod":
+        n_workers = ((2, n_dev // 2)
+                     if opt.exchange_config.backend == "hierarchical"
+                     else n_dev)
+    else:
+        n_workers = 1
+    os.makedirs(args.trace_dir, exist_ok=True)
+    out_path = os.path.join(args.trace_dir, "trace.json")
+    trace = trace_lib.capture_exchange_trace(
+        plan, step_fn, fn_args, axes or (), n_workers,
+        profile=args.profile, out_path=out_path,
+        extra_meta={"arch": args.arch, "dist": args.dist,
+                    "steps": args.steps})
+    print(f"trace written: {out_path}")
+    rows = report_lib.predicted_vs_measured(trace)
+    print(report_lib.render_table(rows))
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="transformer-big")
@@ -227,6 +270,18 @@ def main(argv=None) -> int:
     ap.add_argument("--tune-cache", default=None,
                     help="tuning artifact directory (default: the "
                          "repo-wide experiments/tuning)")
+    ap.add_argument("--metrics-jsonl", default=None,
+                    help="stream per-step metrics (loss, step_ms split "
+                         "into data_ms/compute_ms, tok/s, overflow-"
+                         "skipped steps) and the run history to this "
+                         "JSONL file (see docs/observability.md)")
+    ap.add_argument("--trace-dir", default=None,
+                    help="after training, capture one instrumented step "
+                         "(host-timestamp taps at every exchange phase "
+                         "boundary + runtime wire-byte counters) and "
+                         "write a Chrome-trace JSON here — the Horovod-"
+                         "timeline view of the BucketSchedule; summarize "
+                         "with scripts/trace_report.py")
     args = ap.parse_args(argv)
     if args.tune_cache is None:
         from repro.tuning.search import DEFAULT_CACHE_DIR
@@ -316,11 +371,29 @@ def main(argv=None) -> int:
                              in_specs=(P(), ostate_spec, pspec_batch),
                              out_specs=(P(), ostate_spec, P()),
                              check_rep=False)
+    recorder = None
+    if args.metrics_jsonl:
+        from repro.telemetry.metrics import MetricsLogger, StepRecorder
+        recorder = StepRecorder(
+            MetricsLogger(args.metrics_jsonl),
+            tokens_per_step=batch_per_host * args.seq_len)
     trainer = Trainer(model, step, pipe, TrainerConfig(
         total_steps=args.steps, log_every=args.log_every,
         checkpoint_every=args.checkpoint_every,
-        checkpoint_dir=args.checkpoint_dir, resume=args.resume))
+        checkpoint_dir=args.checkpoint_dir, resume=args.resume),
+        recorder=recorder)
     result = trainer.run(params, opt_state, exchange_state=ex_state)
+    if recorder is not None:
+        # persist the Trainer's windowed history (previously dropped
+        # here) next to the per-step rows
+        for h in result["history"]:
+            recorder.logger.emit("history", **h)
+        recorder.close()
+        print(f"metrics written: {args.metrics_jsonl}")
+    if args.trace_dir:
+        capture_training_trace(args, opt, model, params, pipe, g, step,
+                               result, ex_state, opt_state, axes, n_dev,
+                               sparse_embedding)
     final = result["history"][-1] if result["history"] else {}
     print(f"done: {final}")
     return 0

@@ -78,6 +78,7 @@ class ServeEngine:
     ring: bool = False
     attn_impl: str = "xla_chunked"
     eos_id: int = 2
+    metrics: object = None              # telemetry.metrics.MetricsLogger
 
     def __post_init__(self):
         m, window, ring, impl = (self.model, self.window, self.ring,
@@ -112,13 +113,38 @@ class ServeEngine:
         self.params = broadcast_params(new_params, codec=codec,
                                        backend=backend, axis_name=None)
 
+    def latency_summary(self) -> Dict[str, Dict]:
+        """p50/p99 summaries of the serving histograms recorded so far
+        (empty dict when the engine was built without ``metrics``)."""
+        if self.metrics is None:
+            return {}
+        return {name: h.summary()
+                for name, h in self.metrics.histograms.items()}
+
     def generate(self, prompts: np.ndarray, max_new: int = 32
                  ) -> np.ndarray:
-        """prompts (B, P) int32 -> generated (B, max_new)."""
+        """prompts (B, P) int32 -> generated (B, max_new).
+
+        With a ``metrics`` logger attached, records per-request
+        ``serve/prefill`` latency and per-token ``serve/decode_token``
+        latency histograms (p50/p99 via ``latency_summary``), blocking
+        on each result so the measured interval covers device work —
+        serving latency is host-visible anyway, unlike the train loop's
+        deferred metrics."""
+        import time
+
+        prefill_h = decode_h = None
+        if self.metrics is not None:
+            prefill_h = self.metrics.histogram("serve/prefill")
+            decode_h = self.metrics.histogram("serve/decode_token")
         b = prompts.shape[0]
         cache = self.model.init_cache(b, self.cache_len)
+        t0 = time.perf_counter()
         logits, cache = self._jit_prefill(self.params, cache,
                                           jnp.asarray(prompts))
+        if prefill_h is not None:
+            jax.block_until_ready(logits)
+            prefill_h.observe(time.perf_counter() - t0)
         out = []
         tok = sample_greedy(logits)[:, None]
         done = jnp.zeros((b,), bool)
@@ -127,6 +153,13 @@ class ServeEngine:
             done = done | (tok[:, 0] == self.eos_id)
             if bool(jnp.all(done)):
                 break
+            t0 = time.perf_counter()
             logits, cache = self._jit_step(self.params, cache, tok)
             tok = sample_greedy(logits)[:, None]
+            if decode_h is not None:
+                jax.block_until_ready(tok)
+                decode_h.observe(time.perf_counter() - t0)
+        if self.metrics is not None:
+            self.metrics.counter("serve/requests").inc(b)
+            self.metrics.counter("serve/tokens").inc(b * len(out))
         return np.stack(out, axis=1)

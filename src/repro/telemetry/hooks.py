@@ -1,0 +1,163 @@
+"""Process-global telemetry hook points.
+
+This module is the *leaf* of the telemetry package: it is stdlib-only
+(no jax, no repro imports) so that hot-path modules (``core.comm``,
+``core.backend``, ``core.exchange``) can import it unconditionally
+without creating import cycles or pulling tracing machinery into the
+default path.
+
+Design contract — zero overhead when disabled:
+
+* ``wire_recorder()`` / ``tracer()`` return ``None`` unless something
+  was explicitly installed.  Every call site gates on that *before*
+  doing any work, so the disabled path costs one global read and one
+  ``is None`` check at **trace time only** (all call sites run under
+  ``jax.jit`` tracing; nothing here executes per training step).
+* Recorders are installed around a single abstract evaluation
+  (``telemetry.trace.measure_wire``) or a single instrumented
+  compilation (``telemetry.trace.StepTracer.capture_step``) — never
+  left active across ordinary training.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+
+__all__ = [
+    "WireRecorder", "wire_recorder", "install_wire_recorder",
+    "clear_wire_recorder", "tracer", "install_tracer", "clear_tracer",
+    "stage_scope", "current_stage", "record_collective", "tap",
+    "UNATTRIBUTED",
+]
+
+UNATTRIBUTED = "unattributed"
+
+# Telemetry state is intentionally process-global (not thread-local):
+# recorders are installed around a single trace/lowering, and jax may
+# run parts of tracing on worker threads.  A lock guards install /
+# clear; reads are plain (benign under CPython).
+_LOCK = threading.Lock()
+_WIRE = None
+_TRACER = None
+_STAGE: list[str] = []
+
+
+class WireRecorder:
+    """Accumulates per-stage collective counts and wire bytes.
+
+    Populated by ``record_collective`` calls emitted from
+    ``core.comm`` / ``core.backend`` while the recorder is installed.
+    Bytes use the same per-hop formulas as the plan's static
+    accounting, so for an exact backend+codec the recorded totals
+    match ``ExchangePlan.stage_wire_bytes`` bit-for-bit.
+    """
+
+    def __init__(self) -> None:
+        self.per_stage: dict[str, dict] = {}
+
+    def record(self, kind: str, nbytes: float, stage: str | None) -> None:
+        key = stage if stage is not None else UNATTRIBUTED
+        row = self.per_stage.setdefault(
+            key, {"wire_bytes": 0.0, "collectives": 0, "by_kind": {}})
+        row["wire_bytes"] += float(nbytes)
+        row["collectives"] += 1
+        row["by_kind"][kind] = row["by_kind"].get(kind, 0) + 1
+
+    def stage_wire_bytes(self) -> dict[str, float]:
+        return {k: v["wire_bytes"] for k, v in self.per_stage.items()}
+
+    def total_wire_bytes(self) -> float:
+        return sum(v["wire_bytes"] for v in self.per_stage.values())
+
+    def total_collectives(self) -> int:
+        return sum(v["collectives"] for v in self.per_stage.values())
+
+    def as_dict(self) -> dict:
+        return {
+            "per_stage": {k: dict(v, by_kind=dict(v["by_kind"]))
+                          for k, v in self.per_stage.items()},
+            "total_wire_bytes": self.total_wire_bytes(),
+            "total_collectives": self.total_collectives(),
+        }
+
+
+def wire_recorder():
+    """The installed WireRecorder, or None (the default)."""
+    return _WIRE
+
+
+def install_wire_recorder(rec: WireRecorder) -> None:
+    global _WIRE
+    with _LOCK:
+        if _WIRE is not None:
+            raise RuntimeError("a WireRecorder is already installed")
+        _WIRE = rec
+
+
+def clear_wire_recorder() -> None:
+    global _WIRE
+    with _LOCK:
+        _WIRE = None
+
+
+def tracer():
+    """The installed StepTracer (telemetry.trace), or None."""
+    return _TRACER
+
+
+def install_tracer(t) -> None:
+    global _TRACER
+    with _LOCK:
+        if _TRACER is not None:
+            raise RuntimeError("a tracer is already installed")
+        _TRACER = t
+
+
+def clear_tracer() -> None:
+    global _TRACER
+    with _LOCK:
+        _TRACER = None
+
+
+@contextmanager
+def stage_scope(label: str):
+    """Attribute nested ``record_collective`` / ``tap`` calls to a stage.
+
+    No-op-cheap: maintains a plain list even when telemetry is off (a
+    trace-time append/pop, nothing captured into the jaxpr).
+    """
+    _STAGE.append(label)
+    try:
+        yield
+    finally:
+        _STAGE.pop()
+
+
+def current_stage() -> str | None:
+    return _STAGE[-1] if _STAGE else None
+
+
+def record_collective(kind: str, nbytes: float) -> None:
+    """Bill one collective to the current stage.
+
+    Callers gate on ``wire_recorder() is not None`` before computing
+    ``nbytes``; calling this unconditionally is also safe (no-op when
+    nothing is installed).
+    """
+    rec = _WIRE
+    if rec is not None:
+        rec.record(kind, nbytes, current_stage())
+
+
+def tap(phase: str, value):
+    """Phase-boundary marker.
+
+    When a tracer is installed this threads ``value`` through a host
+    timestamp callback (see ``telemetry.trace.StepTracer.tap``) and
+    returns the result; otherwise it returns ``value`` unchanged — the
+    disabled path inserts NOTHING into the traced computation.
+    """
+    t = _TRACER
+    if t is None:
+        return value
+    return t.tap(phase, current_stage(), value)

@@ -1,0 +1,287 @@
+"""Step tracing: host-timestamp taps, wire measurement, Chrome export.
+
+Three tools, all built on the hook points in ``telemetry.hooks``:
+
+* ``measure_wire(fn, *args)`` — run ONE abstract evaluation
+  (``jax.eval_shape``) of an exchange program with a ``WireRecorder``
+  installed.  Every collective call site in ``core/comm.py`` /
+  ``core/backend.py`` bills its per-worker wire bytes (using the same
+  per-hop formulas as the plan's static accounting) to the enclosing
+  stage scope.  Nothing executes and nothing is added to the real
+  program — this is the runtime drift detector for what
+  ``dryrun --audit-exchange`` checks against lowered HLO.
+
+* ``StepTracer`` — optional host-timestamp taps (``io_callback``,
+  unordered) at the phase boundaries the exchange already marks
+  (accumulate/pack/collective/unpack).  OFF by default: when no tracer
+  is installed, ``hooks.tap`` returns its argument untouched and the
+  lowered program is bit-for-bit the uninstrumented one.  Taps consume
+  a scalar slice of each phase's output, so a tap fires when (in
+  dataflow order) that phase's result exists — timestamps are
+  *approximate* phase-end markers, the Horovod-timeline fidelity
+  level, not a profiler.
+
+* ``chrome_trace(...)`` — convert tap events into Chrome-trace /
+  Perfetto JSON: one process per worker, one thread row per schedule
+  stage, one duration slice per phase, with the plan's stage names,
+  planned + measured wire bytes, and the tuner's predicted per-stage
+  cost embedded in ``otherData`` so ``trace_report`` needs no replay.
+"""
+from __future__ import annotations
+
+import functools
+import json
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.telemetry import hooks
+
+#: phase-end markers in intra-stage order (the trace row anatomy)
+PHASES = ("accumulate", "pack", "collective", "unpack")
+
+TRACE_SCHEMA = 1
+
+
+# ---------------------------------------------------------------------------
+# Wire measurement (abstract — no execution, no program changes)
+# ---------------------------------------------------------------------------
+
+def measure_wire(fn: Callable, *args) -> hooks.WireRecorder:
+    """Abstractly evaluate ``fn(*args)`` with a WireRecorder installed
+    and return it.  Shapes/dtypes seen by the collective call sites are
+    exact (tracer avals), so recorded bytes match the plan's static
+    accounting formula-for-formula; stage scopes entered by the plan
+    attribute every collective to its ``plan.stage_name``."""
+    rec = hooks.WireRecorder()
+    # jax caches inner traces (shard_map / custom_vjp bodies via
+    # lu.cache); if fn was already lowered uninstrumented, a plain
+    # eval_shape would replay the cached jaxpr and never run the
+    # Python-level hook sites — force a full retrace
+    jax.clear_caches()
+    hooks.install_wire_recorder(rec)
+    try:
+        jax.eval_shape(fn, *args)
+    finally:
+        hooks.clear_wire_recorder()
+    return rec
+
+
+# ---------------------------------------------------------------------------
+# Host-timestamp taps
+# ---------------------------------------------------------------------------
+
+class StepTracer:
+    """Collects (worker, stage, phase, host-time) events from the
+    ``hooks.tap`` sites while installed.
+
+    ``axis_names`` are the mesh axes the traced step runs under; the
+    flat worker index is recomputed per tap via ``axis_index`` (falling
+    back to worker 0 when no axis is bound, e.g. taps outside
+    shard_map)."""
+
+    def __init__(self, axis_names: Sequence[str] = ()) -> None:
+        self.axis_names = tuple(axis_names)
+        self.events: List[Dict[str, Any]] = []
+        self.step_marks: List[Dict[str, float]] = []
+
+    # -- called from traced code (via hooks.tap) ----------------------------
+    def tap(self, phase: str, stage: Optional[str], value):
+        if not isinstance(value, jax.Array):
+            return value
+        from jax.experimental import io_callback
+        dep = (value.ravel()[0] if value.size
+               else jnp.zeros((), value.dtype))
+        cb = functools.partial(self._record, stage or "", phase)
+        io_callback(cb, None, self._worker_id(), dep, ordered=False)
+        return value
+
+    def _worker_id(self):
+        flat = None
+        for a in self.axis_names:
+            try:
+                idx = jax.lax.axis_index(a)
+            except NameError:           # axis not bound here
+                continue
+            p = jax.lax.psum(1, a)
+            flat = idx if flat is None else flat * p + idx
+        return jnp.zeros((), jnp.int32) if flat is None else flat
+
+    def _record(self, stage, phase, wid, dep) -> None:
+        self.events.append({"stage": str(stage), "phase": str(phase),
+                            "worker": int(wid),
+                            "t": time.perf_counter()})
+
+    # -- host-side step boundary markers ------------------------------------
+    def mark_step(self, t_start: float, t_end: float) -> None:
+        self.step_marks.append({"t_start": t_start, "t_end": t_end})
+
+    # -- capture ------------------------------------------------------------
+    def capture(self, fn: Callable, *args, warmup: bool = True):
+        """Run ``fn(*args)`` with this tracer installed (a fresh
+        ``jax.jit`` wrapper forces a retrace so the taps lower into the
+        program).  With ``warmup`` the first (compiling) run's events
+        are discarded and a second, timed run produces the trace.
+        Returns ``fn``'s outputs from the timed run."""
+        jax.clear_caches()   # see measure_wire: defeat cached inner traces
+        jitted = jax.jit(fn)
+        hooks.install_tracer(self)
+        try:
+            if warmup:
+                out = jitted(*args)
+                jax.block_until_ready(out)
+                self.events.clear()
+            t0 = time.perf_counter()
+            out = jitted(*args)
+            out = jax.block_until_ready(out)
+            self.mark_step(t0, time.perf_counter())
+            return out
+        finally:
+            hooks.clear_tracer()
+
+
+# ---------------------------------------------------------------------------
+# Chrome-trace export
+# ---------------------------------------------------------------------------
+
+def _phase_rank(phase: str) -> int:
+    try:
+        return PHASES.index(phase)
+    except ValueError:
+        return len(PHASES)
+
+
+def chrome_trace(events: Sequence[Dict[str, Any]],
+                 stage_names: Sequence[str],
+                 step_marks: Sequence[Dict[str, float]] = (),
+                 meta: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    """Build a Chrome-trace dict: pid = worker, tid = schedule row (one
+    per stage, in schedule order), "X" duration slices per phase.
+
+    Phase events are END markers; each slice spans from the previous
+    marker of the same (worker, stage) row — or the step start — to its
+    own timestamp."""
+    rows = {name: k for k, name in enumerate(stage_names)}
+    t_base = min([m["t_start"] for m in step_marks]
+                 + [e["t"] for e in events], default=0.0)
+
+    def us(t: float) -> float:
+        return (t - t_base) * 1e6
+
+    trace_events: List[Dict[str, Any]] = []
+    workers = sorted({e["worker"] for e in events})
+    for w in workers:
+        for name, row in sorted(rows.items(), key=lambda kv: kv[1]):
+            trace_events.append({
+                "ph": "M", "name": "thread_name", "pid": w, "tid": row,
+                "args": {"name": name}})
+        mine = sorted((e for e in events if e["worker"] == w),
+                      key=lambda e: (e["t"], _phase_rank(e["phase"])))
+        last_by_stage: Dict[str, float] = {}
+        step_start = min((m["t_start"] for m in step_marks),
+                         default=t_base)
+        for e in mine:
+            stage = e["stage"]
+            row = rows.get(stage)
+            if row is None:      # unknown stage (e.g. broadcast rows)
+                row = len(rows) + 1
+            start = last_by_stage.get(stage, step_start)
+            trace_events.append({
+                "ph": "X", "name": e["phase"], "cat": "exchange",
+                "pid": w, "tid": row,
+                "ts": us(start), "dur": max(us(e["t"]) - us(start), 0.0),
+                "args": {"stage": stage, "worker": w}})
+            last_by_stage[stage] = e["t"]
+    for m in step_marks:
+        for w in workers or [0]:
+            trace_events.append({
+                "ph": "X", "name": "step", "cat": "step", "pid": w,
+                "tid": len(rows), "ts": us(m["t_start"]),
+                "dur": us(m["t_end"]) - us(m["t_start"]), "args": {}})
+    other = {"schema": TRACE_SCHEMA, "stage_names": list(stage_names)}
+    if meta:
+        other.update(meta)
+    return {"traceEvents": trace_events, "displayTimeUnit": "ms",
+            "otherData": other}
+
+
+def write_trace(trace: Dict[str, Any], path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(trace, f, indent=1)
+
+
+# ---------------------------------------------------------------------------
+# One-call capture for an exchange step
+# ---------------------------------------------------------------------------
+
+def capture_exchange_trace(plan, fn: Callable, args: Tuple,
+                           axis_names: Sequence[str],
+                           n_workers, profile: str = "ethernet",
+                           out_path: Optional[str] = None,
+                           extra_meta: Optional[Dict[str, Any]] = None
+                           ) -> Dict[str, Any]:
+    """Full capture for one exchange-bearing step ``fn(*args)``:
+
+    1. ``measure_wire`` — one abstract evaluation bills runtime wire
+       bytes per stage (against ``plan.stage_wire_bytes``);
+    2. ``StepTracer.capture`` — a warm-up compile with taps lowered in,
+       then one timed run producing host-timestamp phase events;
+    3. Chrome-trace assembly with the plan's names/accounting/predicted
+       costs embedded — written to ``out_path`` when given.
+
+    Returns the trace dict.  The session-default (untraced) ``fn``
+    compilation is untouched — the tracer jits a fresh wrapper."""
+    wire = measure_wire(fn, *args)
+    tracer = StepTracer(axis_names=axis_names)
+    tracer.capture(fn, *args)
+    meta = plan_trace_meta(plan, n_workers, profile=profile,
+                           measured=wire)
+    if extra_meta:
+        meta.update(extra_meta)
+    trace = chrome_trace(tracer.events, plan.stage_names(),
+                         tracer.step_marks, meta)
+    if out_path:
+        write_trace(trace, out_path)
+    return trace
+
+
+def plan_trace_meta(plan, n_workers, profile: str = "ethernet",
+                    measured: Optional[hooks.WireRecorder] = None
+                    ) -> Dict[str, Any]:
+    """Self-contained metadata block for a trace file: stage names, the
+    plan's per-stage wire accounting, the tuner's per-stage predicted
+    cost, and (when given) the wire bytes a ``measure_wire`` recorder
+    observed — everything ``trace_report`` needs without recompiling
+    the plan."""
+    names = plan.stage_names()
+    stages = plan.schedule.stages
+    planned = {n: int(plan.stage_wire_bytes(s, n_workers))
+               for n, s in zip(names, stages)}
+    meta: Dict[str, Any] = {
+        "n_workers": (list(n_workers)
+                      if isinstance(n_workers, (list, tuple))
+                      else n_workers),
+        "profile": profile,
+        "mode": ("backward" if plan.config.overlap_backward
+                 else "staged" if plan.config.overlap
+                 else "zero1" if plan.config.zero1 else "fused"),
+        "codec": plan.config.codec,
+        "backend": plan.config.backend,
+        "planned_wire_bytes": planned,
+        "jax_version": jax.__version__,
+    }
+    try:
+        from repro.tuning import cost as cost_lib
+        from repro.tuning import get_profile
+        prof = get_profile(profile)
+        meta["predicted_us"] = {
+            n: float(cost_lib.predict_stage_us(plan, s, n_workers, prof))
+            for n, s in zip(names, stages)}
+    except Exception as e:   # profile/tuning optional for raw traces
+        meta["predicted_us_error"] = str(e)
+    if measured is not None:
+        meta["measured_wire_bytes"] = {
+            k: v for k, v in measured.stage_wire_bytes().items()}
+    return meta

@@ -26,6 +26,7 @@ class Trainer:
     step_fn: Callable                   # (params, opt_state, batch) -> ...
     pipeline: Any                       # iterable of host batches
     config: TrainerConfig
+    recorder: Any = None                # telemetry.metrics.StepRecorder
 
     def run(self, params, opt_state, log: Callable[[str], None] = print,
             exchange_state: Any = None) -> Dict[str, Any]:
@@ -34,8 +35,15 @@ class Trainer:
         calling convention — the codec residuals then ride the train
         state: threaded through every jit_step, saved in every
         checkpoint, and restored on resume so a mid-run restart picks
-        up with identical residuals."""
+        up with identical residuals.
+
+        With a ``recorder`` (``telemetry.metrics.StepRecorder``) every
+        step additionally records ``step_ms`` split into ``data_ms``
+        (host batch fetch) vs ``compute_ms``, per-step loss/overflow,
+        and streams the rows to the recorder's JSONL sink at each log
+        boundary."""
         cfg = self.config
+        rec = self.recorder
         stateful = exchange_state is not None
         start_step = 0
         if cfg.resume and cfg.checkpoint_dir:
@@ -54,17 +62,35 @@ class Trainer:
         jit_step = jax.jit(self.step_fn)
         history: List[Dict[str, float]] = []
         tokens_seen = 0
+        overflow_pending: List[Any] = []  # un-synced device bools
+        overflow_skipped = 0
         t0 = time.perf_counter()
         window_t0, window_steps = t0, 0
+        window_data_ms = 0.0
         for step in range(start_step, cfg.total_steps):
+            if rec is not None:
+                rec.step_start()
+            t_fetch = time.perf_counter()
             batch = {k: jax.numpy.asarray(v)
                      for k, v in self.pipeline.batch_at(step).items()}
+            data_ms = (time.perf_counter() - t_fetch) * 1e3
+            window_data_ms += data_ms
+            if rec is not None:
+                rec.data_loaded()
             if stateful:
                 params, opt_state, exchange_state, metrics = jit_step(
                     params, opt_state, exchange_state, batch)
             else:
                 params, opt_state, metrics = jit_step(params, opt_state,
                                                       batch)
+            # defer the device->host read of the loss-scaler overflow
+            # flag to the log boundary (no per-step sync on the default
+            # path); overflow steps are skipped updates (PR-5 rollback)
+            # and were silent before
+            if "overflow" in metrics:
+                overflow_pending.append(metrics["overflow"])
+            if rec is not None:
+                rec.step_end(metrics)
             tokens_seen += int(np.prod(batch["tokens"].shape))
             window_steps += 1
             if (step + 1) % cfg.log_every == 0 or step == cfg.total_steps - 1:
@@ -72,22 +98,37 @@ class Trainer:
                      if np.ndim(v) == 0}
                 now = time.perf_counter()
                 dt = now - t0
+                if overflow_pending:
+                    overflow_skipped += int(sum(
+                        int(np.asarray(o)) for o in overflow_pending))
+                    overflow_pending.clear()
                 # mean wall-time per step since the last log line (the
-                # number the overlap benchmark compares on/off)
+                # number the overlap benchmark compares on/off), with
+                # the host data fetch split out
                 m.update(step=step + 1, tokens=tokens_seen,
                          tok_per_s=tokens_seen / max(dt, 1e-9),
                          step_ms=(now - window_t0) * 1e3
-                         / max(window_steps, 1))
+                         / max(window_steps, 1),
+                         data_ms=window_data_ms / max(window_steps, 1),
+                         overflow_skipped=overflow_skipped)
                 window_t0, window_steps = now, 0
+                window_data_ms = 0.0
                 history.append(m)
+                skipped = (f" overflow_skipped={overflow_skipped}"
+                           if overflow_skipped else "")
                 log(f"step {step+1}: loss={m.get('loss', float('nan')):.4f} "
                     f"ce={m.get('ce', float('nan')):.4f} "
                     f"tok/s={m['tok_per_s']:.0f} "
-                    f"step_ms={m['step_ms']:.1f}")
+                    f"step_ms={m['step_ms']:.1f} "
+                    f"data_ms={m['data_ms']:.2f}{skipped}")
+                if rec is not None:
+                    rec.flush()
             if (cfg.checkpoint_every and cfg.checkpoint_dir
                     and (step + 1) % cfg.checkpoint_every == 0):
                 tree = ((params, opt_state, exchange_state) if stateful
                         else (params, opt_state))
                 save_checkpoint(cfg.checkpoint_dir, step + 1, tree)
+        if rec is not None:
+            rec.flush()
         return {"params": params, "opt_state": opt_state,
                 "exchange_state": exchange_state, "history": history}
