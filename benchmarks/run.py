@@ -16,6 +16,7 @@
 #   §Roofline           : roofline  (aggregates experiments/dryrun)
 #   §Overlap            : overlap   (exposed vs hidden communication time)
 #   §Autotuner          : tune      (analytic rank vs measured rank)
+#   §Serving            : serving_load (Poisson TTFT/TPOT + hot swap)
 import argparse
 import json
 import subprocess
@@ -71,9 +72,10 @@ def main() -> None:
                ("strong_scaling", strong_scaling),
                ("roofline", roofline)]
     if not args.fast:
-        from benchmarks import quality_invariance, tune
+        from benchmarks import quality_invariance, serving_load, tune
         modules.insert(5, ("quality_invariance", quality_invariance))
         modules.append(("tune", tune))
+        modules.append(("serving_load", serving_load))
     if args.only:
         keys = args.only.split(",")
         modules = [(n, m) for n, m in modules

@@ -1,0 +1,151 @@
+"""Serving load benchmark: open-loop Poisson arrivals vs SLO latency.
+
+Drives the paged ``ContinuousBatcher`` the way a fleet load balancer
+would: requests arrive on an OPEN-LOOP Poisson clock (arrival times are
+drawn up front from an exponential inter-arrival distribution and do not
+wait for the server — the honest way to measure tail latency, since a
+closed loop self-throttles exactly when the server is slowest).  For
+each QPS point we record per-request TTFT (submit -> first token) and
+per-token latency (TPOT, first token -> finish averaged over decode
+tokens), and report p50/p99.
+
+Two extra rows close the subsystem's acceptance criteria:
+
+* ``serving_hot_swap_under_load`` — a full checkpoint swap streamed
+  bucket-by-bucket through the ExchangePlan WHILE the Poisson trace
+  plays: every request must complete (dropped=0), the params version
+  must flip exactly once.
+* ``serving_paged_memory`` — the paged pool's device bytes vs the dense
+  ``n_slots x cache_len`` cache at equal slot count (must not exceed).
+
+CPU-scale numbers; the shape of the latency-vs-QPS curve (flat, then a
+knee where the queue saturates) is the signal, not the absolute ms.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+QPS_POINTS = (2.0, 8.0, 32.0)
+N_REQUESTS = 24
+N_SLOTS = 4
+CACHE_LEN = 48
+MAX_NEW = 8
+PROMPT_LENS = (4, 6, 8, 10)
+BLOCK_SIZE = 8
+# sized to tokens-in-flight, not slots x cache_len: the longest request
+# is 10 + 8 = 18 tokens = 3 blocks, so 4 slots never need more than 12
+# of these 16 — strictly less memory than the dense cache, no preemption
+N_BLOCKS = 16
+
+
+def _build():
+    import jax
+    from repro.configs import get_config
+    from repro.models import build_model
+    cfg = get_config("llama3.2-1b").reduced()
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    return cfg, m, params
+
+
+def _trace(cfg, qps: float, n: int, seed: int):
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / qps, size=n))
+    prompts = [rng.integers(4, cfg.vocab,
+                            (int(rng.choice(PROMPT_LENS)),)).astype(np.int32)
+               for _ in range(n)]
+    return arrivals, prompts
+
+
+def _play(cb, arrivals, prompts, swap_params=None, swap_at=None):
+    """Feed the trace open-loop; optionally start a hot swap once
+    ``swap_at`` requests have been submitted.  Returns (done, swap_info)."""
+    from repro.serving import Request
+    done, submitted, version_flips = [], 0, 0
+    t0 = time.perf_counter()
+    swap_started = swap_done_step = None
+    steps = 0
+    while submitted < len(arrivals) or cb.queue_depth or \
+            any(r is not None for r in cb.slot_req) or cb.swap_in_flight:
+        now = time.perf_counter() - t0
+        while submitted < len(arrivals) and arrivals[submitted] <= now:
+            cb.submit(Request(uid=submitted, prompt=prompts[submitted],
+                              max_new=MAX_NEW))
+            submitted += 1
+        if swap_params is not None and swap_started is None \
+                and submitted >= swap_at:
+            cb.begin_hot_swap(swap_params)
+            swap_started = steps
+        if not cb.step(done) and submitted < len(arrivals):
+            # idle before the next arrival: sleep to it instead of
+            # spinning (open loop — the arrival clock keeps running)
+            time.sleep(max(0.0, arrivals[submitted]
+                           - (time.perf_counter() - t0)))
+        steps += 1
+        if swap_started is not None and swap_done_step is None \
+                and not cb.swap_in_flight:
+            swap_done_step = steps
+            version_flips = cb.params_version
+    return done, {"steps": steps, "swap_started": swap_started,
+                  "swap_done_step": swap_done_step,
+                  "version": version_flips}
+
+
+def _pct(xs, p):
+    return float(np.percentile(np.asarray(xs), p)) if len(xs) else 0.0
+
+
+def run(emit) -> None:
+    from repro.serving import ContinuousBatcher, SLOConfig
+    from repro.serving.paged_cache import dense_cache_bytes
+
+    cfg, m, params = _build()
+
+    for qps in QPS_POINTS:
+        cb = ContinuousBatcher(m, params, n_slots=N_SLOTS,
+                               cache_len=CACHE_LEN,
+                               block_size=BLOCK_SIZE, n_blocks=N_BLOCKS,
+                               slo=SLOConfig(prefill_chunk=4))
+        arrivals, prompts = _trace(cfg, qps, N_REQUESTS, seed=int(qps))
+        done, _ = _play(cb, arrivals, prompts)
+        ttft = [(r.first_token_t - r.submit_t) * 1e3 for r in done]
+        tpot = [(r.finish_t - r.first_token_t) / max(len(r.output) - 1, 1)
+                * 1e3 for r in done if len(r.output) > 1]
+        tag = f"qps{qps:g}"
+        emit(f"serving_{tag}_ttft", _pct(ttft, 50) * 1e3,
+             f"p50_ms={_pct(ttft, 50):.2f};p99_ms={_pct(ttft, 99):.2f};"
+             f"n={len(done)}/{N_REQUESTS}")
+        emit(f"serving_{tag}_tpot", _pct(tpot, 50) * 1e3,
+             f"p50_ms={_pct(tpot, 50):.2f};p99_ms={_pct(tpot, 99):.2f};"
+             f"util={cb.utilisation:.3f};"
+             f"queue_wait_p99_ms={cb.metrics.histogram('serve/queue_wait').summary()['p99_ms']:.2f}")
+
+    # hot swap while the mid-QPS trace plays
+    import jax
+    cb = ContinuousBatcher(m, params, n_slots=N_SLOTS, cache_len=CACHE_LEN,
+                           block_size=BLOCK_SIZE, n_blocks=N_BLOCKS,
+                           slo=SLOConfig(prefill_chunk=4))
+    arrivals, prompts = _trace(cfg, QPS_POINTS[1], N_REQUESTS, seed=99)
+    new_params = m.init(jax.random.PRNGKey(7))
+    t0 = time.perf_counter()
+    done, info = _play(cb, arrivals, prompts, swap_params=new_params,
+                       swap_at=N_REQUESTS // 3)
+    wall = time.perf_counter() - t0
+    dropped = N_REQUESTS - len(done)
+    swap_steps = (info["swap_done_step"] - info["swap_started"]
+                  if info["swap_done_step"] is not None else -1)
+    emit("serving_hot_swap_under_load", wall * 1e6,
+         f"completed={len(done)}/{N_REQUESTS};dropped={dropped};"
+         f"swap_steps={swap_steps};"
+         f"buckets_per_step=1;version={info['version']};"
+         f"swaps={cb.metrics.counter('serve/hot_swaps').value}")
+
+    # paged pool vs dense cache at equal slot count
+    paged = cb.paged.pool_bytes()
+    dense = dense_cache_bytes(m, N_SLOTS, CACHE_LEN)
+    emit("serving_paged_memory", float(paged),
+         f"paged_bytes={paged};dense_bytes={dense};"
+         f"ratio={paged / dense:.3f}")

@@ -1,8 +1,11 @@
 """Continuous-batching serving demo: a stream of variable-length
-requests served through fixed decode slots with per-slot cache recycling.
+requests served through paged decode slots — block-pool KV cache,
+chunked prefill interleaved with decode, priority/deadline scheduling,
+and a zero-downtime weight hot swap streamed through the ExchangePlan
+while requests are in flight.
 
     PYTHONPATH=src python examples/continuous_serving.py \\
-        [--arch zamba2-7b] [--slots 4] [--requests 12]
+        [--arch zamba2-7b] [--slots 4] [--requests 12] [--blocks 16]
 """
 import argparse
 import time
@@ -12,7 +15,8 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import build_model
-from repro.serving import ContinuousBatcher, Request
+from repro.serving import ContinuousBatcher, Request, SLOConfig
+from repro.serving.paged_cache import dense_cache_bytes
 
 
 def main():
@@ -21,6 +25,11 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--cache-len", type=int, default=48)
+    ap.add_argument("--blocks", type=int, default=None,
+                    help="pool size in blocks (default: full coverage; "
+                         "smaller values trade memory for preemptions)")
+    ap.add_argument("--hot-swap", action="store_true",
+                    help="stream a second checkpoint in mid-run")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
@@ -28,25 +37,43 @@ def main():
     params = model.init(jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
 
-    batcher = ContinuousBatcher(model, params, n_slots=args.slots,
-                                cache_len=args.cache_len)
+    batcher = ContinuousBatcher(
+        model, params, n_slots=args.slots, cache_len=args.cache_len,
+        n_blocks=args.blocks,
+        slo=SLOConfig(ttft_target_ms=500.0, tpot_target_ms=100.0,
+                      prefill_chunk=4))
     for i in range(args.requests):
         plen = int(rng.integers(3, 10))
         batcher.submit(Request(
             uid=i,
             prompt=rng.integers(4, cfg.vocab, (plen,)).astype(np.int32),
-            max_new=int(rng.integers(4, 12))))
+            max_new=int(rng.integers(4, 12)),
+            priority=int(rng.integers(0, 3))))
+
+    if args.hot_swap:
+        stream = batcher.begin_hot_swap(model.init(jax.random.PRNGKey(7)))
+        print(f"hot swap started: {stream.n_buckets} buckets, "
+              f"one per scheduler step")
 
     t0 = time.perf_counter()
     done = batcher.run()
     dt = time.perf_counter() - t0
-    st = batcher.stats
-    print(f"{cfg.name}: {len(done)} requests through {args.slots} slots")
-    print(f"  {st.steps} batch steps, slot utilisation "
-          f"{st.utilisation:.0%}, {dt:.2f}s wall (incl. compile)")
+    mc = batcher.metrics
+    paged = batcher.paged.pool_bytes()
+    dense = dense_cache_bytes(model, args.slots, batcher.paged.view_len)
+    print(f"{cfg.name}: {len(done)} requests through {args.slots} paged "
+          f"slots (params v{batcher.params_version})")
+    print(f"  {mc.counter('sched/steps').value} batch steps, utilisation "
+          f"{batcher.utilisation:.0%}, "
+          f"{mc.counter('sched/preempted').value} preemptions, "
+          f"{dt:.2f}s wall (incl. compile)")
+    print(f"  paged cache {paged / 1e3:.0f} kB vs dense "
+          f"{dense / 1e3:.0f} kB ({paged / dense:.0%})")
+    print(f"  TTFT p99 {mc.histogram('serve/ttft').summary()['p99_ms']:.1f} ms, "
+          f"TPOT p99 {mc.histogram('serve/tpot').summary()['p99_ms']:.1f} ms")
     for req in sorted(done, key=lambda r: r.uid)[:5]:
-        print(f"  req{req.uid}: prompt[{len(req.prompt)}] -> "
-              f"{req.output}")
+        print(f"  req{req.uid} (prio {req.priority}): "
+              f"prompt[{len(req.prompt)}] -> {req.output}")
 
 
 if __name__ == "__main__":

@@ -1,6 +1,7 @@
 """Batched serving example: prefill a batch of prompts, decode with a KV
 cache (full and sliding-window ring-buffer variants), across several
-architecture families.
+architecture families — with latency histograms (TTFT, per-token) and an
+optional streamed weight hot swap between generations.
 
     PYTHONPATH=src python examples/serve_batch.py [--arch llama3.2-1b]
 """
@@ -13,6 +14,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.models import build_model
 from repro.serving import ServeEngine
+from repro.telemetry.metrics import MetricsLogger
 
 
 def main():
@@ -24,6 +26,9 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--window", type=int, default=None,
                     help="sliding-window size (ring-buffer cache)")
+    ap.add_argument("--hot-swap", action="store_true",
+                    help="stream a refreshed checkpoint in bucket-by-"
+                         "bucket, then generate again on the new params")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
@@ -36,7 +41,8 @@ def main():
     cache_len = (args.window if args.window
                  else args.prompt_len + args.max_new + 1)
     eng = ServeEngine(model, params, cache_len=cache_len,
-                      window=args.window, ring=args.window is not None)
+                      window=args.window, ring=args.window is not None,
+                      metrics=MetricsLogger())
     t0 = time.perf_counter()
     out = eng.generate(prompts, max_new=args.max_new)
     dt = time.perf_counter() - t0
@@ -46,8 +52,20 @@ def main():
     print(f"cache: {'ring(window=%d)' % args.window if args.window else 'full'}"
           f", {n_tok} tokens in {dt:.2f}s ({n_tok/dt:.0f} tok/s incl. "
           f"prefill+compile)")
+    for name, s in eng.latency_summary().items():
+        print(f"  {name}: p50 {s['p50_ms']:.1f} ms, p99 {s['p99_ms']:.1f} ms "
+              f"(n={s['count']})")
     for i, row in enumerate(out):
         print(f"  seq{i}: {row.tolist()}")
+
+    if args.hot_swap:
+        stream = eng.begin_hot_swap(model.init(jax.random.PRNGKey(7)))
+        while not eng.hot_swap_step():
+            pass
+        print(f"hot swap: {stream.n_buckets} buckets streamed, params "
+              f"now v{eng.params_version}; regenerating")
+        out2 = eng.generate(prompts, max_new=args.max_new)
+        print(f"  new-params seq0: {out2[0].tolist()}")
 
 
 if __name__ == "__main__":

@@ -1290,25 +1290,40 @@ class ExchangePlan:
             raise ValueError(f"tree structure changed: {treedef} "
                              f"!= planned {self.treedef}")
         axes = self._check_axes(axis_name)
+        out: List[Any] = list(leaves)
+        for b_id in range(len(self.dense_buckets)):
+            self.broadcast_bucket(b_id, leaves, out, axes, root=root)
+        return jax.tree_util.tree_unflatten(self.treedef, out)
+
+    def broadcast_bucket(self, b_id: int, leaves: List[Any],
+                         out: List[Any], axes: Tuple[str, ...],
+                         root: int = 0) -> None:
+        """One bucket of ``broadcast``: pack -> codec-narrowed wire ->
+        (broadcast under ``axes``) -> decode -> unpack into ``out``.
+
+        The streaming unit of the serving hot-swap
+        (``serving.engine.HotSwapStream``): refreshed weights ride
+        bucket-by-bucket between decode steps, staged into a double
+        buffer, and flip atomically once every bucket has landed —
+        in-flight requests keep decoding on the old version throughout.
+        """
+        bucket = self.dense_buckets[b_id]
         codec = self.config.codec_obj
         be = self.config.backend_obj
-        out: List[Any] = list(leaves)
-        for b_id, bucket in enumerate(self.dense_buckets):
-            name = f"exchange/broadcast/bucket=dense{b_id}"
-            with jax.named_scope(name), _telemetry.stage_scope(name):
-                buf = self.pack_bucket(bucket, leaves)
-                if codec.linear:
-                    if axes:
-                        buf = be.broadcast(buf, axes, root=root)
-                else:
-                    wire, scale = codec.encode(
-                        buf, use_kernel=self.config.use_kernel)
-                    if axes:
-                        wire = be.broadcast(wire, axes, root=root)
-                        scale = be.broadcast(scale, axes, root=root)
-                    buf = codec.decode(wire, scale, jnp.float32)
-                self.unpack_bucket(bucket, buf, out, None)
-        return jax.tree_util.tree_unflatten(self.treedef, out)
+        name = f"exchange/broadcast/bucket=dense{b_id}"
+        with jax.named_scope(name), _telemetry.stage_scope(name):
+            buf = self.pack_bucket(bucket, leaves)
+            if codec.linear:
+                if axes:
+                    buf = be.broadcast(buf, axes, root=root)
+            else:
+                wire, scale = codec.encode(
+                    buf, use_kernel=self.config.use_kernel)
+                if axes:
+                    wire = be.broadcast(wire, axes, root=root)
+                    scale = be.broadcast(scale, axes, root=root)
+                buf = codec.decode(wire, scale, jnp.float32)
+            self.unpack_bucket(bucket, buf, out, None)
 
     # -- ZeRO-1 execution (the fused exchange+update schedule) ---------------
     @staticmethod

@@ -160,6 +160,9 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     live slot is in-window; stale slots are those >= length when the ring
     hasn't wrapped yet.  ring=False: slot == position; mask slots >= length
     and (optionally) more than ``window`` behind the newest position.
+    s > 1 (chunked prefill through the decode path, non-ring only): query
+    row i sits at position length-s+i, so it may only see slots up to and
+    including its own — the per-row causal mask below.
     O(C) per token — no flash kernel needed for a 1-row query.
     """
     b, s, h, d = q.shape
@@ -176,12 +179,11 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     scores = scores * (d ** -0.5)
     slots = jnp.arange(c)
     length = jnp.broadcast_to(length, (b,))
-    valid = slots[None, :] < jnp.minimum(length, c)[:, None]
+    qpos = length[:, None] - s + 1 + jnp.arange(s)[None, :]     # (b, s)
+    valid = slots[None, None, :] < jnp.minimum(qpos, c)[:, :, None]
     if not ring and window is not None:
-        valid = valid & (slots[None, :] >= (length - window)[:, None])
-    # (causal within the s new tokens: slot positions of the new tokens
-    # are the last written; for s==1 there is nothing extra to mask.)
-    scores = jnp.where(valid[:, None, None, None, :], scores, -1e30)
+        valid = valid & (slots[None, None, :] >= (qpos - window)[:, :, None])
+    scores = jnp.where(valid[:, None, None, :, :], scores, -1e30)
     p_ = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgsc,bckd->bskgd", p_.astype(q.dtype), v_cache)
     return out.reshape(b, s, h, d)
@@ -292,10 +294,14 @@ def mla_attention_absorbed(p: Params, cfg: ArchConfig, x: jax.Array,
     scores = scores * (qd ** -0.5)
     slots = jnp.arange(cache_len)
     newlen = jnp.broadcast_to(pos0 + s, (b,))
-    valid = slots[None, :] < jnp.minimum(newlen, cache_len)[:, None]
+    # per-row causal mask (query row i sits at position newlen-s+i) so a
+    # multi-token chunk (chunked prefill) stays causal; s==1 reduces to
+    # the plain slots < length mask
+    qpos = newlen[:, None] - s + 1 + jnp.arange(s)[None, :]      # (b, s)
+    valid = slots[None, None, :] < jnp.minimum(qpos, cache_len)[:, :, None]
     if not ring and window is not None:
-        valid = valid & (slots[None, :] >= (newlen - window)[:, None])
-    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+        valid = valid & (slots[None, None, :] >= (qpos - window)[:, :, None])
+    scores = jnp.where(valid[:, None, :, :], scores, -1e30)
     attn = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
     ctx = jnp.einsum("bhsS,bSl->bshl", attn, ckv_c,
                      preferred_element_type=f32)

@@ -411,18 +411,30 @@ class Model:
                     attn_impl: str = "xla_chunked",
                     ring: bool = False,
                     input_embeds: Optional[jax.Array] = None,
-                    moe_mode: str = "dropless"
+                    moe_mode: str = "dropless",
+                    n_valid: Optional[jax.Array] = None
                     ) -> Tuple[jax.Array, Dict]:
         """One decode step.  tokens (B, 1) -> logits (B, vocab).
         ``input_embeds`` (B, 1, d) bypasses the token embedding (VLM patch
-        positions)."""
+        positions).
+
+        Chunked prefill: tokens (B, s) with s > 1 runs all s positions
+        through one step (attention families, non-ring caches only — the
+        per-row causal mask in ``decode_attention`` keeps it exact) and
+        returns ALL s logits rows (B, s, vocab).  ``n_valid`` (B,), when
+        given, is the per-slot count of REAL tokens in the chunk: the
+        cache length advances by ``n_valid`` instead of s, so rows past a
+        slot's valid count are write-garbage the caller discards (the
+        paged writeback drops them; dense callers must not mix lengths).
+        """
         cfg = self.cfg
         if input_embeds is not None:
             x = input_embeds
         else:
             x = L.embed(params["embedding"], tokens)
+        s = x.shape[1]
         length = cache["length"]                     # (B,) per-slot
-        positions = jnp.broadcast_to(length[:, None], (x.shape[0], 1))
+        positions = length[:, None] + jnp.arange(s)[None, :]
 
         if cfg.family == "hybrid":
             x, cache = self._hybrid_decode(params, cache, x, positions,
@@ -446,10 +458,10 @@ class Model:
             x, new_stacked = jax.lax.scan(body, x,
                                           (params["layers"], stacked))
             cache = {**cache, **new_stacked}
-        cache["length"] = length + 1
+        cache["length"] = length + (n_valid if n_valid is not None else s)
         h = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
-        logits = self.head(params, h)[:, -1]
-        return logits, cache
+        logits = self.head(params, h)
+        return (logits if s > 1 else logits[:, -1]), cache
 
     def _hybrid_decode(self, params, cache, x, positions, enc, window,
                        attn_impl, ring):

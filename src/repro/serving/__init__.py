@@ -1,3 +1,6 @@
-from repro.serving.engine import (ServeEngine, broadcast_params,
-                                  broadcast_plan, sample_greedy)
-from repro.serving.scheduler import ContinuousBatcher, Request, SchedulerStats
+from repro.serving.engine import (HotSwapStream, ServeEngine,
+                                  broadcast_params, broadcast_plan,
+                                  sample_greedy)
+from repro.serving.paged_cache import (PagedKVCache, cache_leaf_paths,
+                                       dense_cache_bytes)
+from repro.serving.scheduler import ContinuousBatcher, Request, SLOConfig

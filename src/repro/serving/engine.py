@@ -69,6 +69,66 @@ def broadcast_params(params, plan: Optional[ExchangePlan] = None,
     return plan.broadcast(params, axis_name, root=root)
 
 
+class HotSwapStream:
+    """Zero-downtime weight refresh, one ``ExchangePlan`` bucket at a
+    time.
+
+    Double-buffered: the refreshed checkpoint streams through
+    ``plan.broadcast_bucket`` (codec-narrowed wire, same fusion buckets
+    as the gradient exchange) into a staging copy of the live leaves;
+    each ``step()`` lands ONE bucket, so the serving loop interleaves
+    swap work between decode steps and in-flight requests never pause.
+    Once every bucket has landed, ``result()`` yields the complete
+    version-stamped tree for an atomic flip — a torn read (some leaves
+    old, some new) is impossible because the live params are untouched
+    until then.
+    """
+
+    def __init__(self, plan: ExchangePlan, current_params, new_params,
+                 version: int, axis_name: comm.AxisNames = None,
+                 root: int = 0):
+        self.plan = plan
+        self.version = version
+        self.root = root
+        self._axes = plan._check_axes(axis_name)
+        leaves, treedef = jax.tree_util.tree_flatten(new_params)
+        if treedef != plan.treedef:
+            raise ValueError(f"params tree changed: {treedef} != planned "
+                             f"{plan.treedef}")
+        self._new_leaves = leaves
+        self._staged = list(jax.tree_util.tree_flatten(current_params)[0])
+        self._i = 0
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self.plan.dense_buckets)
+
+    @property
+    def buckets_done(self) -> int:
+        return self._i
+
+    @property
+    def done(self) -> bool:
+        return self._i >= self.n_buckets
+
+    def step(self) -> bool:
+        """Stream one bucket into the staging buffer; True when all
+        buckets have landed."""
+        if not self.done:
+            self.plan.broadcast_bucket(self._i, self._new_leaves,
+                                       self._staged, self._axes,
+                                       root=self.root)
+            self._i += 1
+        return self.done
+
+    def result(self):
+        if not self.done:
+            raise ValueError(f"swap incomplete: {self._i}/"
+                             f"{self.n_buckets} buckets landed")
+        return jax.tree_util.tree_unflatten(self.plan.treedef,
+                                            self._staged)
+
+
 @dataclasses.dataclass
 class ServeEngine:
     model: object
@@ -79,10 +139,12 @@ class ServeEngine:
     attn_impl: str = "xla_chunked"
     eos_id: int = 2
     metrics: object = None              # telemetry.metrics.MetricsLogger
+    params_version: int = 0
 
     def __post_init__(self):
         m, window, ring, impl = (self.model, self.window, self.ring,
                                  self.attn_impl)
+        self._swap: Optional[HotSwapStream] = None
 
         def _step(params, cache, tok):
             return m.decode_step(params, cache, tok, window=window,
@@ -96,9 +158,48 @@ class ServeEngine:
 
         self._jit_prefill = jax.jit(_prefill)
 
+    def begin_hot_swap(self, new_params, codec: str = "identity",
+                       backend: str = "jax",
+                       version: Optional[int] = None,
+                       fusion_threshold: Optional[int] = None
+                       ) -> HotSwapStream:
+        """Start a streaming weight refresh (see ``HotSwapStream``).
+        Drive it with ``hot_swap_step()`` between decode steps; the flip
+        is atomic when the last bucket lands."""
+        if self._swap is not None:
+            raise ValueError("hot swap already in flight "
+                             f"(version {self._swap.version})")
+        plan = broadcast_plan(new_params, codec=codec, backend=backend,
+                              fusion_threshold=fusion_threshold)
+        self._swap = HotSwapStream(
+            plan, self.params, new_params,
+            self.params_version + 1 if version is None else version)
+        return self._swap
+
+    @property
+    def swap_in_flight(self) -> bool:
+        return self._swap is not None
+
+    def hot_swap_step(self) -> bool:
+        """Advance an in-flight swap by one bucket; flips the live
+        params (and bumps ``params_version``) when complete.  True when
+        no swap remains in flight."""
+        if self._swap is None:
+            return True
+        if self._swap.step():
+            self.params = self._swap.result()
+            self.params_version = self._swap.version
+            if self.metrics is not None:
+                self.metrics.counter("serve/hot_swaps").inc()
+                self.metrics.gauge("serve/params_version").set(
+                    self.params_version)
+            self._swap = None
+            return True
+        return False
+
     def hot_swap(self, new_params, codec: str = "identity",
                  backend: str = "jax") -> None:
-        """Swap serving weights in place via ``broadcast_params``.
+        """One-shot swap: stream every bucket, then flip.
 
         Single-process form: runs the plan's pack/codec/unpack pipeline
         locally (so a narrowed codec shows the same wire precision it
@@ -110,8 +211,9 @@ class ServeEngine:
         program and feed the result back in as the params argument —
         collectives cannot run from a Python-side attribute assignment.
         """
-        self.params = broadcast_params(new_params, codec=codec,
-                                       backend=backend, axis_name=None)
+        self.begin_hot_swap(new_params, codec=codec, backend=backend)
+        while not self.hot_swap_step():
+            pass
 
     def latency_summary(self) -> Dict[str, Dict]:
         """p50/p99 summaries of the serving histograms recorded so far
@@ -125,21 +227,27 @@ class ServeEngine:
                  ) -> np.ndarray:
         """prompts (B, P) int32 -> generated (B, max_new).
 
+        Rows that hit EOS are FINISHED: every later position is masked
+        to ``eos_id`` (the slot keeps stepping until the whole batch
+        drains, but its sampled garbage never reaches the output).
+
         With a ``metrics`` logger attached, records per-request
-        ``serve/prefill`` latency and per-token ``serve/decode_token``
-        latency histograms (p50/p99 via ``latency_summary``), blocking
-        on each result so the measured interval covers device work —
-        serving latency is host-visible anyway, unlike the train loop's
-        deferred metrics."""
+        ``serve/prefill`` latency, ``serve/ttft`` (prefill + first
+        decode, the time to the first host-visible token) and per-token
+        ``serve/decode_token`` latency histograms (p50/p99 via
+        ``latency_summary``), blocking on each result so the measured
+        interval covers device work — serving latency is host-visible
+        anyway, unlike the train loop's deferred metrics."""
         import time
 
-        prefill_h = decode_h = None
+        prefill_h = decode_h = ttft_h = None
         if self.metrics is not None:
             prefill_h = self.metrics.histogram("serve/prefill")
             decode_h = self.metrics.histogram("serve/decode_token")
+            ttft_h = self.metrics.histogram("serve/ttft")
         b = prompts.shape[0]
         cache = self.model.init_cache(b, self.cache_len)
-        t0 = time.perf_counter()
+        t_start = t0 = time.perf_counter()
         logits, cache = self._jit_prefill(self.params, cache,
                                           jnp.asarray(prompts))
         if prefill_h is not None:
@@ -147,6 +255,9 @@ class ServeEngine:
             prefill_h.observe(time.perf_counter() - t0)
         out = []
         tok = sample_greedy(logits)[:, None]
+        if ttft_h is not None:
+            jax.block_until_ready(tok)
+            ttft_h.observe(time.perf_counter() - t_start)
         done = jnp.zeros((b,), bool)
         for _ in range(max_new):
             out.append(np.asarray(tok[:, 0]))
@@ -155,7 +266,9 @@ class ServeEngine:
                 break
             t0 = time.perf_counter()
             logits, cache = self._jit_step(self.params, cache, tok)
-            tok = sample_greedy(logits)[:, None]
+            # finished rows emit eos_id, not whatever the model sampled
+            tok = jnp.where(done[:, None], jnp.int32(self.eos_id),
+                            sample_greedy(logits)[:, None])
             if decode_h is not None:
                 jax.block_until_ready(tok)
                 decode_h.observe(time.perf_counter() - t0)

@@ -1,0 +1,266 @@
+"""Paged KV cache: a fixed block pool + per-slot block tables.
+
+The dense serving cache allocates ``n_slots * cache_len`` rows per layer
+up front, so slot count and max context length multiply.  Paging breaks
+that product: KV rows live in a pool of ``n_blocks`` fixed-size blocks
+(``block_size`` tokens each), and each slot owns an ordered block table
+mapping its logical positions onto pool blocks.  Memory is bounded by
+the TOKENS IN FLIGHT, not slots x max-length; a finished request's
+blocks return to the free list immediately (free-on-finish) and the next
+request starts writing into recycled blocks with no copy (its logical
+``length`` restarts at 0, so stale rows are never visible through the
+attention mask — copy-free slot refill).
+
+The jitted step stays the model's own ``decode_step``: ``gather_view``
+materialises a dense-shaped view of each slot's blocks (the XLA-level
+equivalent of paged attention's block-table indirection), the step runs
+unchanged on the view, and ``writeback`` scatters ONLY the newly written
+rows back into the pool — rows past a slot's ``n_valid`` (padding in a
+mixed prefill/decode chunk, or garbage from an empty slot) are dropped
+at scatter time, which is what makes chunked prefill and decode safely
+batchable in one program.
+
+Cache leaves are classified structurally: a leaf whose shape changes
+with ``cache_len`` (axis 2 of ``(lead, batch, cache_len, ...)``) is
+paged; everything else — per-slot recurrent state (SSM/xLSTM/Mamba
+conv), the ``length`` vector — stays resident per slot and is
+write-masked instead of paged.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _paths_and_leaves(tree) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
+
+
+def cache_leaf_paths(model, n_slots: int) -> Tuple[str, ...]:
+    """Paths of the cache leaves that scale with ``cache_len`` — found by
+    diffing two template caches, so the classification tracks whatever
+    layout a model family uses (k/v, MLA ckv/kr, hybrid attn segments)
+    instead of hard-coding key names."""
+    a = jax.eval_shape(lambda: model.init_cache(n_slots, 8))
+    b = jax.eval_shape(lambda: model.init_cache(n_slots, 16))
+    paged = []
+    for (pa, la), (pb, lb) in zip(_paths_and_leaves(a), _paths_and_leaves(b)):
+        assert pa == pb, f"cache structure diverged: {pa} != {pb}"
+        if la.shape != lb.shape:
+            if not (la.ndim >= 3 and la.shape[2] == 8 and lb.shape[2] == 16):
+                raise ValueError(f"cache leaf {pa} scales with cache_len "
+                                 f"on an unexpected axis: {la.shape} vs "
+                                 f"{lb.shape}")
+            paged.append(pa)
+    return tuple(paged)
+
+
+def dense_cache_bytes(model, n_slots: int, cache_len: int) -> int:
+    """Bytes of the dense ``init_cache(n_slots, cache_len)`` pytree — the
+    baseline the paged pool is measured against."""
+    tree = jax.eval_shape(lambda: model.init_cache(n_slots, cache_len))
+    return sum(math.prod(l.shape) * l.dtype.itemsize
+               for l in jax.tree_util.tree_leaves(tree))
+
+
+@dataclasses.dataclass
+class PagedKVCache:
+    """Block pool + block tables + per-slot resident state.
+
+    Host-side object: owns the free list and the (numpy) block tables;
+    ``state`` is the device pytree threaded through the jitted step.
+    ``view_len = max_blocks_per_slot * block_size`` is the logical
+    context width every slot sees — callers must keep
+    ``length + chunk <= view_len`` (``ensure`` enforces the block side).
+    """
+    model: Any
+    n_slots: int
+    block_size: int
+    n_blocks: int
+    max_blocks_per_slot: int
+
+    def __post_init__(self):
+        if self.n_blocks < self.n_slots:
+            raise ValueError(f"pool of {self.n_blocks} blocks cannot give "
+                             f"{self.n_slots} slots one block each")
+        self._paged = frozenset(cache_leaf_paths(self.model, self.n_slots))
+        template = self.model.init_cache(self.n_slots, self.block_size)
+        self.state = self._pool_from_template(template)
+        # host bookkeeping: table entry n_blocks == "no block" sentinel
+        # (dropped by the writeback's mode="drop" scatter)
+        self.block_tables = np.full(
+            (self.n_slots, self.max_blocks_per_slot), self.n_blocks,
+            np.int32)
+        self.slot_blocks: List[List[int]] = [[] for _ in range(self.n_slots)]
+        self.free: List[int] = list(range(self.n_blocks - 1, -1, -1))
+
+    # -- layout --------------------------------------------------------------
+    def _pool_from_template(self, template) -> Dict:
+        def to_pool(path, leaf):
+            if jax.tree_util.keystr(path) in self._paged:
+                # (lead, B, block_size, *rest) -> (lead, n_blocks,
+                # block_size, *rest): one physical block per pool row
+                shape = (leaf.shape[0], self.n_blocks) + leaf.shape[2:]
+                return jnp.zeros(shape, leaf.dtype)
+            return leaf
+        return jax.tree_util.tree_map_with_path(to_pool, template)
+
+    @property
+    def view_len(self) -> int:
+        return self.max_blocks_per_slot * self.block_size
+
+    @property
+    def n_free_blocks(self) -> int:
+        return len(self.free)
+
+    def pool_bytes(self) -> int:
+        """Device bytes of the paged state (pool + resident leaves)."""
+        return sum(math.prod(l.shape) * l.dtype.itemsize
+                   for l in jax.tree_util.tree_leaves(self.state))
+
+    # -- block accounting ----------------------------------------------------
+    def ensure(self, slot: int, n_tokens: int) -> bool:
+        """Grow ``slot``'s table to cover ``n_tokens`` logical positions.
+        Returns False (allocating nothing) when the pool is dry — the
+        scheduler's preemption trigger."""
+        need = -(-n_tokens // self.block_size)
+        if need > self.max_blocks_per_slot:
+            raise ValueError(f"request needs {need} blocks > "
+                             f"max_blocks_per_slot={self.max_blocks_per_slot}"
+                             f" (raise max_len or block budget)")
+        have = len(self.slot_blocks[slot])
+        if need - have > len(self.free):
+            return False
+        for i in range(have, need):
+            blk = self.free.pop()
+            self.slot_blocks[slot].append(blk)
+            self.block_tables[slot, i] = blk
+        return True
+
+    def release(self, slot: int) -> None:
+        """Free-on-finish: all of ``slot``'s blocks back to the pool."""
+        self.free.extend(reversed(self.slot_blocks[slot]))
+        self.slot_blocks[slot] = []
+        self.block_tables[slot, :] = self.n_blocks
+
+    def reset_slot(self, slot: int) -> None:
+        """Copy-free refill: zero the slot's logical length and re-init
+        its resident (recurrent) state; pool blocks are NOT touched —
+        stale rows are invisible behind the ``length`` mask."""
+        mask = np.zeros((self.n_slots,), bool)
+        mask[slot] = True
+        self.state = _reset_resident(self.model, self._paged, self.state,
+                                     self.block_size, jnp.asarray(mask))
+
+    def tables(self) -> jax.Array:
+        return jnp.asarray(self.block_tables)
+
+    # -- jit-side view/writeback (closure-friendly statics) ------------------
+    def view_fn(self):
+        paged = self._paged
+        def view(state, block_tables):
+            return gather_view(state, block_tables, paged)
+        return view
+
+    def writeback_fn(self):
+        paged, bs, nb = self._paged, self.block_size, self.n_blocks
+        def wb(state, new_view, block_tables, pos0, n_valid, chunk):
+            return writeback(state, new_view, block_tables, pos0, n_valid,
+                             chunk, paged, bs, nb)
+        return wb
+
+
+def gather_view(state: Dict, block_tables: jax.Array,
+                paged_paths: frozenset) -> Dict:
+    """Materialise the dense-shaped cache view each slot's block table
+    describes: pool (lead, n_blocks, bs, *rest) -> view (lead, n_slots,
+    max_blocks*bs, *rest).  Sentinel table entries clamp onto the last
+    block — garbage the length mask hides."""
+    def gather(path, leaf):
+        if jax.tree_util.keystr(path) not in paged_paths:
+            return leaf
+        v = jnp.take(leaf, jnp.clip(block_tables, 0, leaf.shape[1] - 1),
+                     axis=1)                  # (lead, B, max_blocks, bs, ...)
+        return v.reshape(v.shape[0], v.shape[1], v.shape[2] * v.shape[3],
+                         *v.shape[4:])
+    return jax.tree_util.tree_map_with_path(gather, state)
+
+
+def writeback(state: Dict, new_view: Dict, block_tables: jax.Array,
+              pos0: jax.Array, n_valid: jax.Array, chunk: int,
+              paged_paths: frozenset, block_size: int,
+              n_blocks: int) -> Dict:
+    """Scatter the step's new rows back into the pool.
+
+    For each slot, rows ``[pos0, pos0 + n_valid)`` of the view are real;
+    everything else this step wrote (padding in a mixed chunk, garbage
+    from empty slots) is DROPPED — invalid rows scatter to the
+    out-of-range block id and fall off via ``mode="drop"``.  Resident
+    (recurrent) leaves are write-masked per slot the same way, and
+    ``length`` advances by ``n_valid``."""
+    b = pos0.shape[0]
+    active = n_valid > 0
+
+    def scatter(path, pool, view_new):
+        key = jax.tree_util.keystr(path)
+        if key not in paged_paths:
+            if key.endswith("['length']"):
+                return pos0 + n_valid
+            # resident per-slot state: keep old rows for inactive slots
+            if view_new.ndim >= 2 and view_new.shape[1] == b:
+                m = active.reshape((1, b) + (1,) * (view_new.ndim - 2))
+            else:
+                m = active.reshape((b,) + (1,) * (view_new.ndim - 1))
+            return jnp.where(m, view_new, pool)
+        out = pool
+        for j in range(chunk):
+            pos = pos0 + j                                  # (B,)
+            ok = j < n_valid
+            blk_idx = jnp.clip(pos // block_size, 0,
+                               block_tables.shape[1] - 1)
+            blk = jnp.take_along_axis(block_tables, blk_idx[:, None],
+                                      axis=1)[:, 0]
+            blk = jnp.where(ok, blk, n_blocks)              # drop invalid
+            off = pos % block_size
+            idx = pos[None, :, None].reshape(
+                (1, b, 1) + (1,) * (view_new.ndim - 3))
+            row = jnp.take_along_axis(view_new, idx, axis=2)[:, :, 0]
+            out = out.at[:, blk, off].set(row, mode="drop")
+        return out
+
+    return jax.tree_util.tree_map_with_path(
+        lambda p, pool, new: scatter(p, pool, new), state, new_view)
+
+
+def _reset_resident(model, paged_paths: frozenset, state: Dict,
+                    block_size: int, mask: jax.Array) -> Dict:
+    """Re-init resident leaves (length, recurrent states) for masked
+    slots; the pool is untouched."""
+    n_slots = mask.shape[0]
+    fresh = model.init_cache(n_slots, block_size)
+    b = n_slots
+
+    def sel(old, init):
+        if old.ndim >= 2 and old.shape[1] == b:
+            m = mask.reshape((1, b) + (1,) * (old.ndim - 2))
+        else:
+            m = mask.reshape((b,) + (1,) * (old.ndim - 1))
+        return jnp.where(m, init, old)
+
+    # paged leaves have pool (not template) shape — pass them through
+    flat_old = jax.tree_util.tree_flatten_with_path(state)[0]
+    flat_new = jax.tree_util.tree_flatten_with_path(fresh)[0]
+    leaves = []
+    for (po, lo), (_, lf) in zip(flat_old, flat_new):
+        if jax.tree_util.keystr(po) in paged_paths:
+            leaves.append(lo)
+        else:
+            leaves.append(sel(lo, lf))
+    treedef = jax.tree_util.tree_structure(state)
+    return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,27 +1,51 @@
-"""Continuous-batching request scheduler over the decode engine.
+"""SLO-aware continuous batching over the paged KV cache.
 
 Production serving runs many requests of different lengths through one
-fixed-batch ``serve_step``: finished sequences' slots are immediately
-refilled from a queue (continuous batching / in-flight batching).  This
-scheduler implements that over ``Model.decode_step`` with a slot-level
-KV cache: each slot tracks its own ``length`` offset into a per-slot
-ring region, and prefill for a new request streams its prompt through
-the shared step function.
+fixed-batch decode program.  This scheduler implements the full loop:
 
-CPU-scale but architecturally faithful: slot management, queueing,
-per-request stop conditions and utilisation accounting are the real
-thing; swap the jitted step for the sharded production one and it
-serves a pod.
+* **admission queue** ordered by (priority, deadline): requests wait in
+  a heap, not a FIFO, so urgent work overtakes best-effort work;
+* **paged slots**: each slot's KV lives in pool blocks
+  (``serving.paged_cache``), allocated as the request grows and freed
+  the step it finishes — slot count no longer multiplies max context
+  length into the cache footprint;
+* **chunked prefill** batched through the SAME jitted ``decode_step`` as
+  decode: a prefilling slot feeds ``prefill_chunk`` prompt tokens per
+  step while its neighbours keep decoding one token each (per-slot
+  ``n_valid`` masks the padding rows) — decode latency does not stall
+  behind a long prompt, and prompts do not trickle in token-by-token;
+* **preemption**: when the block pool runs dry, or a request blows its
+  deadline while better work waits, the victim's blocks are released
+  and the request goes back to the queue (it re-prefills prompt +
+  generated-so-far on readmission, so greedy decoding resumes exactly);
+* **zero-downtime hot swap**: ``begin_hot_swap`` streams a refreshed
+  checkpoint bucket-by-bucket through the ``ExchangePlan`` broadcast
+  between decode steps (``engine.HotSwapStream``) and flips atomically.
+
+Everything observable flows through ``telemetry.metrics``: counters
+(``sched/steps``, ``sched/completed``, ``sched/preempted``, ...),
+gauges (``sched/queue_depth``, ``sched/free_blocks``), and the
+``serve/ttft`` / ``serve/tpot`` latency histograms the load benchmark
+reads its p50/p99 from.
+
+CPU-scale but architecturally faithful: swap the jitted step for the
+sharded production one and it serves a pod.
 """
 from __future__ import annotations
 
 import dataclasses
+import heapq
+import time
 from collections import deque
 from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.serving.engine import HotSwapStream, broadcast_plan
+from repro.serving.paged_cache import PagedKVCache
+from repro.telemetry.metrics import MetricsLogger
 
 
 @dataclasses.dataclass
@@ -30,109 +54,351 @@ class Request:
     prompt: np.ndarray              # (P,) int32
     max_new: int = 16
     eos_id: int = 2
+    priority: int = 0               # lower value = more urgent
+    deadline_ms: Optional[float] = None   # end-to-end budget from submit
     # filled by the scheduler:
     output: Optional[List[int]] = None
+    submit_t: float = 0.0
+    first_token_t: Optional[float] = None
+    finish_t: Optional[float] = None
+    n_preempted: int = 0
 
 
-@dataclasses.dataclass
-class SchedulerStats:
-    steps: int = 0
-    slot_steps: int = 0
-    active_slot_steps: int = 0
-    completed: int = 0
+@dataclasses.dataclass(frozen=True)
+class SLOConfig:
+    """Serving objectives + the policies that chase them.
 
-    @property
-    def utilisation(self) -> float:
-        return (self.active_slot_steps / self.slot_steps
-                if self.slot_steps else 0.0)
+    ``ttft_target_ms`` / ``tpot_target_ms`` are attainment targets
+    (violations are counted per finished request); ``prefill_chunk`` is
+    the prompt tokens a prefilling slot consumes per step (1 disables
+    chunking); ``preempt_over_budget`` enables requeueing a running
+    request that has blown ``deadline_ms`` while more urgent work
+    waits."""
+    ttft_target_ms: float = 1000.0
+    tpot_target_ms: float = 200.0
+    prefill_chunk: int = 8
+    preempt_over_budget: bool = True
 
 
 class ContinuousBatcher:
-    """Fixed-slot continuous batching over per-slot caches.
+    """Paged, SLO-scheduled continuous batching (see module docstring).
 
-    Each slot owns an independent cache (stacked on the batch dim of one
-    shared cache pytree).  Prompts are prefilled token-by-token through
-    the SAME jitted decode_step used for generation — one compiled
-    program serves everything.
+    ``cache_len`` is the per-request logical context bound
+    (prompt + max_new); the pool holds ``n_blocks`` blocks of
+    ``block_size`` tokens — sized below ``n_slots * cache_len`` it
+    serves the same slots in less memory, trading for preemptions when
+    tokens-in-flight exceed the pool.
     """
 
     def __init__(self, model, params, n_slots: int, cache_len: int,
-                 attn_impl: str = "xla_chunked"):
+                 attn_impl: str = "xla_chunked",
+                 block_size: int = 8,
+                 n_blocks: Optional[int] = None,
+                 slo: Optional[SLOConfig] = None,
+                 metrics: Optional[MetricsLogger] = None):
         self.model = model
         self.params = params
+        self.params_version = 0
         self.n_slots = n_slots
         self.cache_len = cache_len
-        self.cache = model.init_cache(n_slots, cache_len)
+        self.attn_impl = attn_impl
+        self.slo = slo or SLOConfig()
+        self.metrics = metrics or MetricsLogger()
+        # chunked prefill needs the per-row causal decode mask —
+        # attention-family caches only; recurrent families step 1:1
+        self._chunkable = model.cfg.family not in ("ssm", "hybrid")
+        chunk = self.slo.prefill_chunk if self._chunkable else 1
+        self._chunk = max(1, chunk)
+        if n_blocks is None:
+            n_blocks = n_slots * (-(-cache_len // block_size))
+        # view headroom: a chunk-wide step writes chunk rows starting at
+        # every slot's position (at most cache_len - 1) before the
+        # writeback drops the invalid ones, so the gathered view must
+        # reach row cache_len - 1 + chunk; with chunk == 1 this is
+        # exactly the dense width
+        max_blocks = -(-(cache_len + self._chunk - 1) // block_size)
+        self.paged = PagedKVCache(model, n_slots, block_size, n_blocks,
+                                  max_blocks)
         # per-slot bookkeeping (host side)
         self.slot_req: List[Optional[Request]] = [None] * n_slots
         self.slot_pending: List[deque] = [deque() for _ in range(n_slots)]
-        self.slot_done_at: List[int] = [0] * n_slots
-        self.queue: deque = deque()
-        self.stats = SchedulerStats()
-
-        def _step(params, cache, toks):
-            return model.decode_step(params, cache, toks,
-                                     attn_impl=attn_impl)
-
-        self._jit_step = jax.jit(_step)
+        self.slot_len = np.zeros((n_slots,), np.int64)
+        self._queue: List = []          # heap of (prio, deadline, seq, req)
+        self._seq = 0
+        self._swap: Optional[HotSwapStream] = None
+        self._steps: Dict[int, object] = {}     # chunk width -> jitted step
 
     # -- public API ---------------------------------------------------------
     def submit(self, req: Request) -> None:
-        req.output = []
-        self.queue.append(req)
+        if len(req.prompt) + req.max_new > self.cache_len:
+            raise ValueError(
+                f"request {req.uid}: prompt({len(req.prompt)}) + "
+                f"max_new({req.max_new}) > cache_len({self.cache_len})")
+        need = -(-(len(req.prompt) + req.max_new) // self.paged.block_size)
+        if need > self.paged.n_blocks:
+            raise ValueError(
+                f"request {req.uid} needs {need} blocks but the pool has "
+                f"only {self.paged.n_blocks} — it could never complete")
+        if req.output is None:
+            req.output = []
+        req.submit_t = time.perf_counter()
+        self._push(req)
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self._queue)
+
+    @property
+    def utilisation(self) -> float:
+        slot = self.metrics.counter("sched/slot_steps").value
+        act = self.metrics.counter("sched/active_slot_steps").value
+        return act / slot if slot else 0.0
+
+    @property
+    def swap_in_flight(self) -> bool:
+        return self._swap is not None
+
+    def begin_hot_swap(self, new_params, codec: str = "identity",
+                       backend: str = "jax",
+                       version: Optional[int] = None,
+                       fusion_threshold: Optional[int] = None
+                       ) -> HotSwapStream:
+        """Start streaming new weights; one bucket lands per ``step()``
+        and the live params flip atomically after the last one.  See
+        ``engine.HotSwapStream``."""
+        if self._swap is not None:
+            raise ValueError("hot swap already in flight "
+                             f"(version {self._swap.version})")
+        plan = broadcast_plan(new_params, codec=codec, backend=backend,
+                              fusion_threshold=fusion_threshold)
+        self._swap = HotSwapStream(
+            plan, self.params, new_params,
+            self.params_version + 1 if version is None else version)
+        return self._swap
 
     def run(self, max_steps: int = 10_000) -> List[Request]:
-        """Drive until queue + slots drain.  Returns completed requests."""
+        """Drive until queue + slots (and any swap stream) drain.
+        Returns completed requests."""
         done: List[Request] = []
         for _ in range(max_steps):
-            self._fill_slots()
-            if all(r is None for r in self.slot_req):
+            if not self.step(done):
                 break
-            self._one_step(done)
+        while self._swap is not None:
+            self._swap_advance()
         return done
 
-    # -- internals ----------------------------------------------------------
-    def _fill_slots(self) -> None:
-        reset = np.zeros((self.n_slots,), bool)
-        for s in range(self.n_slots):
-            if self.slot_req[s] is None and self.queue:
-                req = self.queue.popleft()
-                self.slot_req[s] = req
-                self.slot_pending[s] = deque(req.prompt.tolist())
-                self.slot_done_at[s] = -1
-                reset[s] = True
-        if reset.any():
-            # per-slot cache reset: length -> 0, recurrent states
-            # re-initialised; other slots untouched (true continuous
-            # batching — in-flight requests keep decoding)
-            self.cache = self.model.reset_slots(self.cache,
-                                                jnp.asarray(reset))
+    def step(self, done: Optional[List[Request]] = None) -> bool:
+        """One engine step: admit, (maybe) preempt, decode/prefill one
+        batched token chunk, advance an in-flight hot swap by one
+        bucket.  Returns False when there is nothing left to do."""
+        if done is None:
+            done = []
+        now = time.perf_counter()
+        self._maybe_preempt(now)
+        self._admit(now)
+        active = [s for s in range(self.n_slots)
+                  if self.slot_req[s] is not None]
+        if not active:
+            if self._swap is not None:
+                self._swap_advance()
+                return True
+            return False
+        self._one_step(active, done)
+        if self._swap is not None:
+            self._swap_advance()
+        self._set_gauges()
+        return True
 
-    def _one_step(self, done: List[Request]) -> None:
-        toks = np.zeros((self.n_slots, 1), np.int32)
-        active = np.zeros((self.n_slots,), bool)
-        for s, req in enumerate(self.slot_req):
-            if req is None:
+    # -- queue --------------------------------------------------------------
+    def _push(self, req: Request) -> None:
+        dl = (req.submit_t + req.deadline_ms / 1e3
+              if req.deadline_ms is not None else float("inf"))
+        heapq.heappush(self._queue, (req.priority, dl, self._seq, req))
+        self._seq += 1
+
+    def _queue_key(self, req: Request):
+        dl = (req.submit_t + req.deadline_ms / 1e3
+              if req.deadline_ms is not None else float("inf"))
+        return (req.priority, dl)
+
+    # -- admission / preemption ---------------------------------------------
+    def _admit(self, now: float) -> None:
+        refill = np.zeros((self.n_slots,), bool)
+        for s in range(self.n_slots):
+            if self.slot_req[s] is not None or not self._queue:
                 continue
-            active[s] = True
+            if self.paged.n_free_blocks == 0:
+                break
+            _, _, _, req = heapq.heappop(self._queue)
+            self.slot_req[s] = req
+            # re-prefill prompt + generated-so-far after a preemption
+            self.slot_pending[s] = deque(
+                list(req.prompt.tolist()) + list(req.output))
+            self.slot_len[s] = 0
+            self.paged.ensure(s, 1)
+            refill[s] = True
+            self.metrics.counter("sched/admitted").inc()
+            self.metrics.histogram("serve/queue_wait").observe(
+                now - req.submit_t)
+        if refill.any():
+            # copy-free refill: zero length + recurrent state for the
+            # recycled slots; in-flight neighbours are untouched
+            self.paged.state = self._reset(refill)
+
+    def _reset(self, mask: np.ndarray):
+        from repro.serving.paged_cache import _reset_resident
+        return _reset_resident(self.model, self.paged._paged,
+                               self.paged.state, self.paged.block_size,
+                               jnp.asarray(mask))
+
+    def _maybe_preempt(self, now: float) -> None:
+        """Deadline policy: a running request that has blown its budget
+        loses its slot to strictly more urgent waiting work."""
+        if not self.slo.preempt_over_budget or not self._queue:
+            return
+        head = self._queue[0][3]
+        for s in range(self.n_slots):
+            req = self.slot_req[s]
+            if req is None or req.deadline_ms is None:
+                continue
+            if (now > req.submit_t + req.deadline_ms / 1e3
+                    and self._queue_key(head) < self._queue_key(req)):
+                self._preempt_slot(s)
+                return                        # at most one per step
+
+    def _preempt_slot(self, s: int) -> None:
+        req = self.slot_req[s]
+        req.n_preempted += 1
+        self.paged.release(s)
+        self.slot_req[s] = None
+        self.slot_pending[s].clear()
+        self.slot_len[s] = 0
+        self._push(req)
+        self.metrics.counter("sched/preempted").inc()
+
+    def _preempt_for_blocks(self, needing: int) -> bool:
+        """Pool-dry policy: evict the least urgent active request
+        (excluding none — the needing slot itself may be the victim)."""
+        victims = [s for s in range(self.n_slots)
+                   if self.slot_req[s] is not None]
+        if not victims:
+            return False
+        worst = max(victims,
+                    key=lambda s: (self._queue_key(self.slot_req[s]),
+                                   -self.slot_len[s]))
+        self._preempt_slot(worst)
+        return worst != needing
+
+    # -- the step -----------------------------------------------------------
+    def _jit_step(self, chunk: int):
+        if chunk not in self._steps:
+            model, impl = self.model, self.attn_impl
+            view = self.paged.view_fn()
+            wb = self.paged.writeback_fn()
+
+            def step(params, state, bt, toks, n_valid):
+                v = view(state, bt)
+                pos0 = v["length"]
+                logits, new_v = model.decode_step(
+                    params, v, toks, attn_impl=impl, n_valid=n_valid)
+                return logits, wb(state, new_v, bt, pos0, n_valid, chunk)
+
+            self._steps[chunk] = jax.jit(step)
+        return self._steps[chunk]
+
+    def _one_step(self, active: List[int], done: List[Request]) -> None:
+        # interleaving policy: prefill work widens the step to
+        # prefill_chunk; decoding neighbours ride along with n_valid=1
+        chunk = (self._chunk
+                 if any(self.slot_pending[s] for s in active) else 1)
+        want = np.zeros((self.n_slots,), np.int32)
+        for s in active:
+            pend = len(self.slot_pending[s])
+            want[s] = min(chunk, pend) if pend else 1
+        # block capacity (preempting when the pool runs dry)
+        for s in list(active):
+            if self.slot_req[s] is None:
+                continue
+            while not self.paged.ensure(s, int(self.slot_len[s] + want[s])):
+                if not self._preempt_for_blocks(s) \
+                        or self.slot_req[s] is None:
+                    break
+        active = [s for s in active if self.slot_req[s] is not None]
+        if not active:
+            return
+        toks = np.zeros((self.n_slots, chunk), np.int32)
+        n_valid = np.zeros((self.n_slots,), np.int32)
+        for s in active:
+            req = self.slot_req[s]
             if self.slot_pending[s]:
-                toks[s, 0] = self.slot_pending[s].popleft()
+                k = int(want[s])
+                for j in range(k):
+                    toks[s, j] = self.slot_pending[s].popleft()
+                n_valid[s] = k
             else:
                 toks[s, 0] = req.output[-1]
-        logits, self.cache = self._jit_step(self.params, self.cache,
-                                            jnp.asarray(toks))
+                n_valid[s] = 1
+        t0 = time.perf_counter()
+        logits, self.paged.state = self._jit_step(chunk)(
+            self.params, self.paged.state, self.paged.tables(),
+            jnp.asarray(toks), jnp.asarray(n_valid))
         nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
-        self.stats.steps += 1
-        self.stats.slot_steps += self.n_slots
-        self.stats.active_slot_steps += int(active.sum())
-        for s, req in enumerate(self.slot_req):
-            if req is None:
-                continue
+        if nxt.ndim == 1:
+            nxt = nxt[:, None]
+        step_dt = time.perf_counter() - t0
+        now = time.perf_counter()
+        self.slot_len += n_valid.astype(np.int64)
+        self.metrics.counter("sched/steps").inc()
+        self.metrics.counter("sched/slot_steps").inc(self.n_slots)
+        self.metrics.counter("sched/active_slot_steps").inc(len(active))
+        self.metrics.counter("sched/tokens").inc(int(n_valid.sum()))
+        for s in active:
+            req = self.slot_req[s]
             if self.slot_pending[s]:
                 continue                       # still prefilling
-            req.output.append(int(nxt[s]))
-            if (int(nxt[s]) == req.eos_id
-                    or len(req.output) >= req.max_new):
-                done.append(req)
-                self.stats.completed += 1
-                self.slot_req[s] = None
+            tok = int(nxt[s, int(n_valid[s]) - 1])
+            if req.first_token_t is None:
+                req.first_token_t = now
+                self.metrics.histogram("serve/ttft").observe(
+                    now - req.submit_t)
+            else:
+                self.metrics.histogram("serve/tpot").observe(step_dt)
+            req.output.append(tok)
+            if tok == req.eos_id or len(req.output) >= req.max_new:
+                self._finish(s, req, now, done)
+
+    def _finish(self, s: int, req: Request, now: float,
+                done: List[Request]) -> None:
+        req.finish_t = now
+        self.paged.release(s)                  # free-on-finish
+        self.slot_req[s] = None
+        self.slot_len[s] = 0
+        done.append(req)
+        self.metrics.counter("sched/completed").inc()
+        if req.first_token_t is not None:
+            ttft_ms = (req.first_token_t - req.submit_t) * 1e3
+            if ttft_ms > self.slo.ttft_target_ms:
+                self.metrics.counter("sched/ttft_violations").inc()
+            n_dec = max(len(req.output) - 1, 0)
+            if n_dec:
+                tpot_ms = (req.finish_t - req.first_token_t) / n_dec * 1e3
+                if tpot_ms > self.slo.tpot_target_ms:
+                    self.metrics.counter("sched/tpot_violations").inc()
+
+    # -- hot swap -----------------------------------------------------------
+    def _swap_advance(self) -> None:
+        if self._swap.step():
+            self.params = self._swap.result()
+            self.params_version = self._swap.version
+            self.metrics.counter("serve/hot_swaps").inc()
+            self.metrics.gauge("serve/params_version").set(
+                self.params_version)
+            self._swap = None
+
+    def _set_gauges(self) -> None:
+        self.metrics.gauge("sched/queue_depth").set(len(self._queue))
+        self.metrics.gauge("sched/free_blocks").set(
+            self.paged.n_free_blocks)
+        self.metrics.gauge("sched/active_slots").set(
+            sum(r is not None for r in self.slot_req))
+        self.metrics.gauge("sched/utilisation").set(self.utilisation)
